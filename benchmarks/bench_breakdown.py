@@ -1,0 +1,62 @@
+"""Table 2: cold-start overhead breakdown A/B/C/D per strategy × function —
+measured on this container AND predicted by the Eq. 1 model, with the
+prediction validated against the measurement (container constants) and
+projected to the paper's c220g5 hardware."""
+
+from __future__ import annotations
+
+import tempfile
+from typing import List
+
+import numpy as np
+
+from repro.core import PAPER_C220G5, calibrate_container, predict
+
+from .common import STRATEGIES, build_suite, csv_row, rounds
+
+
+def run(n_functions: int = 6, n_rounds: int = 3, root: str | None = None) -> List[str]:
+    root = root or tempfile.mkdtemp(prefix="bench_break_")
+    worker, specs = build_suite(root, n_functions=n_functions)
+    hw_here = calibrate_container(root)
+    lines: List[str] = [csv_row(
+        "table2_calibration", 0.0,
+        f"bw_store_MBps={hw_here.bw_store/1e6:.0f};lat_store_us={hw_here.lat_store*1e6:.0f}",
+    )]
+
+    for spec in specs:
+        sizes = worker.registry.sizes(spec.name, residual_init_s=1e-4)
+        for strategy in STRATEGIES:
+            rs = rounds(worker, spec, strategy, n=n_rounds)
+            A = float(np.median([r.metrics.t_preconfig for r in rs])) * 1e3
+            B = float(np.median([r.metrics.t_eager for r in rs])) * 1e3
+            C = float(np.median([r.metrics.t_init for r in rs])) * 1e3
+            D = float(np.median([r.metrics.d_overhead for r in rs])) * 1e3
+            # measured init_compute feeds the model's C term for seuss/regular
+            if strategy in ("seuss", "regular"):
+                sizes.init_compute = C / 1e3
+            pred = predict(strategy, sizes, hw_here)
+            pred_paper = predict(strategy, sizes, PAPER_C220G5)
+            meas_total = max(A, B) + C + D
+            err = abs(pred.total * 1e3 - meas_total) / max(meas_total, 1e-9)
+            lines.append(csv_row(
+                f"table2.{strategy}.{spec.name}", meas_total * 1e3,
+                f"A={A:.2f};B={B:.2f};C={C:.2f};D={D:.2f};"
+                f"model_ms={pred.total*1e3:.2f};model_err={err:.2f};"
+                f"paper_c220g5_ms={pred_paper.total*1e3:.2f}",
+            ))
+
+        # paper-hardware projection of the headline ratios
+        p = {s: predict(s, sizes, PAPER_C220G5).total for s in STRATEGIES}
+        lines.append(csv_row(
+            f"table2_paper_projection.{spec.name}", p["snapfaas"] * 1e6,
+            f"vs_reap={p['reap']/p['snapfaas']:.1f}x;"
+            f"vs_seuss={p['seuss']/p['snapfaas']:.1f}x;"
+            f"vs_regular={p['regular']/p['snapfaas']:.1f}x",
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    for l in run():
+        print(l)

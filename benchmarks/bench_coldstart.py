@@ -1,0 +1,67 @@
+"""Fig. 5 (a–d): cold-start boot / execution / end-to-end latency per
+strategy, plus speed-up over `regular` and the optimal (warm) bound."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from collections import defaultdict
+from typing import Dict, List
+
+import numpy as np
+
+from .common import STRATEGIES, build_suite, cold_request, csv_row, rounds
+
+
+def run(n_functions: int = 6, n_rounds: int = 5, root: str | None = None) -> List[str]:
+    root = root or tempfile.mkdtemp(prefix="bench_cold_")
+    worker, specs = build_suite(root, n_functions=n_functions)
+    lines: List[str] = []
+    table: Dict[str, Dict[str, Dict[str, float]]] = defaultdict(dict)
+
+    # optimal = warm execution only (paper Fig. 5d "optimal")
+    for spec in specs:
+        r_warm = None
+        _ = cold_request(worker, spec, "snapfaas", drop_cache=False)
+        from repro.serving.trace import request_tokens
+        from .common import BENCH_CFG
+        toks = request_tokens(spec, np.random.default_rng(0), BENCH_CFG.vocab_size,
+                              seq=getattr(spec, "exec_seq", 32))
+        r_warm = worker.handle(spec.name, toks, strategy="snapfaas")
+        table[spec.name]["optimal"] = {"e2e": r_warm.exec_s}
+
+    for strategy in STRATEGIES:
+        for spec in specs:
+            rs = rounds(worker, spec, strategy, n=n_rounds)
+            boot = float(np.median([r.boot_s for r in rs]))
+            ex = float(np.median([r.exec_s for r in rs]))
+            e2e = float(np.median([r.latency_s for r in rs]))
+            table[spec.name][strategy] = {"boot": boot, "exec": ex, "e2e": e2e}
+
+    for spec in specs:
+        base = table[spec.name]
+        sf = base["snapfaas"]["e2e"]
+        for strategy in STRATEGIES:
+            row = base[strategy]
+            lines.append(csv_row(
+                f"fig5_e2e.{strategy}.{spec.name}", row["e2e"] * 1e6,
+                f"norm_to_snapfaas={row['e2e'] / sf:.2f};"
+                f"boot_us={row['boot']*1e6:.0f};exec_us={row['exec']*1e6:.0f}",
+            ))
+        # Fig. 5d: speed-up over regular vs function exec time
+        reg = base["regular"]["e2e"]
+        opt = base["optimal"]["e2e"]
+        lines.append(csv_row(
+            f"fig5d_speedup.{spec.name}", base["snapfaas"]["e2e"] * 1e6,
+            f"snapfaas={reg / base['snapfaas']['e2e']:.2f}x;"
+            f"snapfaas-={reg / base['snapfaas-']['e2e']:.2f}x;"
+            f"reap={reg / base['reap']['e2e']:.2f}x;"
+            f"seuss={reg / base['seuss']['e2e']:.2f}x;"
+            f"optimal={reg / opt:.2f}x",
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    for l in run():
+        print(l)

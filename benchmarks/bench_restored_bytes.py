@@ -1,0 +1,36 @@
+"""Fig. 6: bytes eagerly restored from storage per strategy × function,
+against the full-function snapshot size."""
+
+from __future__ import annotations
+
+import tempfile
+from typing import List
+
+from .common import build_suite, cold_request, csv_row
+
+
+def run(n_functions: int = 10, root: str | None = None) -> List[str]:
+    root = root or tempfile.mkdtemp(prefix="bench_bytes_")
+    worker, specs = build_suite(root, n_functions=n_functions)
+    lines: List[str] = []
+    for spec in specs:
+        sizes = worker.registry.sizes(spec.name)
+        rows = {}
+        for strategy in ("reap", "snapfaas-", "snapfaas"):
+            r = cold_request(worker, spec, strategy, drop_cache=False)
+            rows[strategy] = r.metrics.eager_bytes
+        mb = lambda b: b / 2**20
+        lines.append(csv_row(
+            f"fig6_restored_mb.{spec.name}", mb(rows["snapfaas"]),
+            f"full_snapshot_mb={mb(sizes.full_bytes):.1f};"
+            f"reap_mb={mb(rows['reap']):.1f};"
+            f"snapfaas-_mb={mb(rows['snapfaas-']):.1f};"
+            f"snapfaas_mb={mb(rows['snapfaas']):.1f};"
+            f"reduction_vs_reap={rows['reap']/max(rows['snapfaas'],1):.1f}x",
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    for l in run():
+        print(l)

@@ -1,0 +1,36 @@
+"""§Roofline: the (arch × shape × mesh) table from the dry-run artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from .common import csv_row
+
+
+def run(art_dir: str = "artifacts/dryrun") -> List[str]:
+    lines: List[str] = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        r = d["roofline"]
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        mem = d.get("memory_analysis", {})
+        lines.append(csv_row(
+            f"roofline.{d['arch']}.{d['shape']}.{d['mesh']}", bound * 1e6,
+            f"dom={r['dominant']};Tc_ms={r['t_compute']*1e3:.2f};"
+            f"Tm_ms={r['t_memory']*1e3:.2f};Tx_ms={r['t_collective']*1e3:.2f};"
+            f"useful={r['useful_flops_ratio']:.2f};"
+            f"live_gb={mem.get('live_bytes_per_device', 0)/2**30:.2f}",
+        ))
+    if not lines:
+        lines.append(csv_row("roofline.missing", 0.0,
+                             "run launch/dryrun.py first"))
+    return lines
+
+
+if __name__ == "__main__":
+    for l in run():
+        print(l)

@@ -1,0 +1,58 @@
+"""Fig. 7: worker throughput, SnapFaaS vs regular, as the cold fraction and
+memory budget vary.  As in the paper this is a simulated workload: measured
+per-strategy cold/warm latencies + the memory model (base snapshots consume
+worker RAM → fewer concurrent instances) drive an M/M/c-style closed-form
+throughput estimate."""
+
+from __future__ import annotations
+
+import tempfile
+from typing import List
+
+import numpy as np
+
+from .common import build_suite, cold_request, csv_row
+from repro.serving.trace import request_tokens
+
+
+def run(root: str | None = None) -> List[str]:
+    root = root or tempfile.mkdtemp(prefix="bench_tput_")
+    worker, specs = build_suite(root, n_functions=4)
+    spec = specs[0]
+
+    # measure once: cold e2e per strategy, warm exec
+    lat_cold = {}
+    for strategy in ("regular", "snapfaas"):
+        rs = [cold_request(worker, spec, strategy, seed=s) for s in range(3)]
+        lat_cold[strategy] = float(np.median([r.latency_s for r in rs]))
+    toks = request_tokens(spec, np.random.default_rng(0), 16384)
+    warm = worker.handle(spec.name, toks, strategy="snapfaas")
+    lat_warm = warm.latency_s
+
+    inst_mb = sum(a.meta.nbytes for a in
+                  worker.registry.cold_start(spec.name, "snapfaas-").arrays.values()) / 2**20
+    base_mb = worker.registry.pools[spec.family if hasattr(spec, 'family') else specs[0].family].nbytes() / 2**20
+
+    lines: List[str] = []
+    for mem_gb in (2, 8):
+        mem_mb = mem_gb * 1024
+        for cold_frac in (0.0, 0.1, 0.3, 0.5, 0.7, 1.0):
+            tput = {}
+            for strategy in ("regular", "snapfaas"):
+                overhead = base_mb if strategy == "snapfaas" else 0.0
+                slots = max(1, int((mem_mb - overhead) // inst_mb))
+                t_req = cold_frac * lat_cold[strategy] + (1 - cold_frac) * lat_warm
+                tput[strategy] = slots / t_req
+            delta = (tput["snapfaas"] - tput["regular"]) / tput["regular"]
+            lines.append(csv_row(
+                f"fig7_throughput.mem{mem_gb}gb.cold{int(cold_frac*100)}",
+                1e6 / tput["snapfaas"],
+                f"snapfaas_rps={tput['snapfaas']:.1f};"
+                f"regular_rps={tput['regular']:.1f};delta={delta*100:+.0f}%",
+            ))
+    return lines
+
+
+if __name__ == "__main__":
+    for l in run():
+        print(l)

@@ -1,0 +1,16 @@
+"""Lower + compile one (arch × shape) cell against the 512-chip multi-pod
+production mesh and print its memory/cost/roofline evidence.
+
+Run:  PYTHONPATH=src python examples/multipod_dryrun.py [arch] [shape]
+"""
+
+import subprocess
+import sys
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "olmoe-1b-7b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.dryrun",
+     "--arch", arch, "--shape", shape, "--both-meshes"],
+    env={"PYTHONPATH": "src"}, check=True,
+)

@@ -1,0 +1,22 @@
+"""Serve a small model with batched requests under every cold-start
+strategy; print the Fig.5-style comparison.
+
+Run:  PYTHONPATH=src python examples/serve_coldstart.py
+"""
+
+import json
+import tempfile
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving.trace import build_functions, replay_trace, summarize
+
+root = tempfile.mkdtemp(prefix="serve_example_")
+cfg = reduced(get_config("gemma-2b"))
+model = build_model(cfg)
+worker, fns = build_functions(root, cfg, model, n_functions=4)
+
+for strategy in ("regular", "reap", "seuss", "snapfaas-", "snapfaas"):
+    results = replay_trace(worker, fns, n_requests=16, cold_fraction=0.5,
+                           strategy=strategy, seed=0)
+    print(json.dumps(summarize(strategy, results)))

@@ -1,0 +1,62 @@
+"""SnapFaaS-in-JAX core: layered snapshot engine for model-instance
+cold-starts (the paper's primary contribution, adapted to a TPU fleet).
+
+Public API:
+
+* :class:`~repro.core.chunkstore.ChunkStore` — content-addressed pack store
+* :func:`~repro.core.snapshot.take_snapshot` / ``take_diff_snapshot`` /
+  ``resolve`` — layered base/diff manifests
+* :class:`~repro.core.workingset.AccessLog` / ``build_working_set`` — REAP-
+  style working-set files
+* :mod:`~repro.core.restore` — regular / reap / seuss / snapfaas− / snapfaas
+  restoration strategies with A/B/C/D metrics
+* :mod:`~repro.core.planner` — Eq. 1 first-principles cold-start model
+* :class:`~repro.core.registry.ZygoteRegistry` — worker-side lifecycle
+"""
+
+from .chunkstore import DEFAULT_CHUNK_BYTES, ChunkRef, ChunkStore
+from .metrics import ColdStartMetrics
+from .planner import (
+    PAPER_C220G5,
+    TPU_LOCAL_SSD,
+    TPU_OBJECT_STORE,
+    ColdStartPrediction,
+    SnapshotSizes,
+    StorageModel,
+    calibrate_container,
+    lower_bound,
+    plan_restore,
+    predict,
+)
+from .registry import STRATEGIES, FunctionRecord, ZygoteRegistry
+from .restore import (
+    BasePool,
+    MaterializedArray,
+    RestoredInstance,
+    restore_layered,
+    restore_reap,
+    restore_regular,
+    restore_seuss,
+)
+from .snapshot import (
+    ArrayMeta,
+    SnapshotManifest,
+    flatten_pytree,
+    resolve,
+    take_diff_snapshot,
+    take_snapshot,
+    unflatten_paths,
+)
+from .workingset import AccessLog, WorkingSet, build_working_set
+
+__all__ = [
+    "AccessLog", "ArrayMeta", "BasePool", "ChunkRef", "ChunkStore",
+    "ColdStartMetrics", "ColdStartPrediction", "DEFAULT_CHUNK_BYTES",
+    "FunctionRecord", "MaterializedArray", "PAPER_C220G5", "RestoredInstance",
+    "STRATEGIES", "SnapshotManifest", "SnapshotSizes", "StorageModel",
+    "TPU_LOCAL_SSD", "TPU_OBJECT_STORE", "WorkingSet", "build_working_set",
+    "calibrate_container", "flatten_pytree", "lower_bound", "plan_restore",
+    "predict", "resolve", "restore_layered", "restore_reap", "restore_regular",
+    "restore_seuss", "take_diff_snapshot", "take_snapshot", "unflatten_paths",
+    "ZygoteRegistry",
+]

@@ -1,0 +1,277 @@
+"""Content-addressed chunk store with pack files.
+
+This is the storage substrate for SnapFaaS-style layered snapshots.
+
+Design notes (mapping to the paper):
+
+* A VM snapshot is a *sparse file of dirty 4 KiB pages* plus a JSON metadata
+  file.  Our unit is a *chunk* (default 256 KiB) of an array's serialized
+  bytes; a snapshot is a *pack file* (all chunk payloads, appended
+  sequentially) plus a JSON manifest.
+* Eager restoration in the paper is `readv` of the dirty pages — sequential,
+  batched, at disk bandwidth.  Here eager restoration is a single pass over
+  the pack file reading (sorted, coalesced) ranges.
+* Demand paging in the paper is file-mmap + synchronous page faults.  Here
+  lazy chunks are materialized one at a time from an ``mmap`` of the pack
+  file, charged at access time.
+* Content addressing (BLAKE2b-128) gives structural dedup: diff snapshots
+  store only chunks whose digest differs from the base, and identical chunks
+  across *snapshots* (e.g. adjacent training checkpoints) are stored once.
+* All-zero chunks are elided entirely (the paper's sparse-file holes).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import mmap
+import os
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+DEFAULT_CHUNK_BYTES = 256 * 1024
+
+_ZERO_DIGEST = "0" * 32
+
+
+def chunk_digest(data: bytes | memoryview) -> str:
+    return hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+def is_zero(data: bytes | memoryview) -> bool:
+    # fast path: compare against a zero buffer of the same length
+    return bytes(data) == b"\x00" * len(data)
+
+
+@dataclass(frozen=True)
+class ChunkRef:
+    """Reference to one chunk of serialized bytes."""
+
+    digest: str
+    size: int
+
+    @property
+    def zero(self) -> bool:
+        return self.digest == _ZERO_DIGEST
+
+    def to_json(self) -> list:
+        return [self.digest, self.size]
+
+    @staticmethod
+    def from_json(obj: Sequence) -> "ChunkRef":
+        return ChunkRef(digest=obj[0], size=int(obj[1]))
+
+
+def zero_ref(size: int) -> ChunkRef:
+    return ChunkRef(digest=_ZERO_DIGEST, size=size)
+
+
+@dataclass(frozen=True)
+class ChunkLoc:
+    """Physical location of a chunk inside a pack file."""
+
+    pack: str
+    offset: int
+    size: int
+
+
+class PackWriter:
+    """Appends chunk payloads to a single pack file (sequential layout).
+
+    Sequential layout is load-bearing for performance: the eager restore path
+    reads a snapshot's working set as a handful of coalesced sequential
+    ranges, which is what lets restoration run at the storage medium's
+    *bandwidth* rather than its random-read latency (paper §3.2).
+    """
+
+    def __init__(self, path: str, pack_id: str):
+        self._f = open(path, "wb")
+        self.pack_id = pack_id
+        self.offset = 0
+
+    def append(self, data: bytes | memoryview) -> ChunkLoc:
+        n = self._f.write(data)
+        loc = ChunkLoc(pack=self.pack_id, offset=self.offset, size=n)
+        self.offset += n
+        return loc
+
+    def close(self) -> None:
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._f.close()
+
+
+class ChunkStore:
+    """Directory-backed content-addressed chunk store.
+
+    Layout::
+
+        root/
+          packs/<pack_id>.pack     chunk payloads, append-only
+          index.json               digest -> (pack, offset, size)
+
+    The index is the paper's snapshot *metadata*; packs are the sparse files.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(os.path.join(root, "packs"), exist_ok=True)
+        self._index: Dict[str, ChunkLoc] = {}
+        self._mmaps: Dict[str, mmap.mmap] = {}
+        self._files: Dict[str, object] = {}
+        self._lock = threading.Lock()
+        self._load_index()
+
+    # ------------------------------------------------------------------ index
+
+    def _index_path(self) -> str:
+        return os.path.join(self.root, "index.json")
+
+    def _load_index(self) -> None:
+        p = self._index_path()
+        if os.path.exists(p):
+            with open(p) as f:
+                raw = json.load(f)
+            self._index = {
+                d: ChunkLoc(pack=v[0], offset=int(v[1]), size=int(v[2]))
+                for d, v in raw.items()
+            }
+
+    def save_index(self) -> None:
+        with self._lock:
+            raw = {d: [l.pack, l.offset, l.size] for d, l in self._index.items()}
+        tmp = self._index_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(raw, f)
+        os.replace(tmp, self._index_path())
+
+    def __contains__(self, digest: str) -> bool:
+        return digest == _ZERO_DIGEST or digest in self._index
+
+    def location(self, digest: str) -> ChunkLoc:
+        return self._index[digest]
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self._index)
+
+    def stored_bytes(self) -> int:
+        return sum(l.size for l in self._index.values())
+
+    # ------------------------------------------------------------------ write
+
+    def open_pack(self, pack_id: str) -> PackWriter:
+        path = os.path.join(self.root, "packs", f"{pack_id}.pack")
+        return PackWriter(path, pack_id)
+
+    def put_chunks(
+        self, pack: PackWriter, payloads: Iterable[bytes | memoryview]
+    ) -> List[ChunkRef]:
+        """Store payloads, deduping against the index. Returns refs in order."""
+        refs: List[ChunkRef] = []
+        for data in payloads:
+            if is_zero(data):
+                refs.append(zero_ref(len(data)))
+                continue
+            d = chunk_digest(data)
+            with self._lock:
+                present = d in self._index
+            if not present:
+                loc = pack.append(data)
+                with self._lock:
+                    # re-check under lock (another writer may have raced)
+                    self._index.setdefault(d, loc)
+            refs.append(ChunkRef(digest=d, size=len(data)))
+        return refs
+
+    # ------------------------------------------------------------------- read
+
+    def _pack_mmap(self, pack_id: str) -> mmap.mmap:
+        with self._lock:
+            m = self._mmaps.get(pack_id)
+            if m is None:
+                f = open(os.path.join(self.root, "packs", f"{pack_id}.pack"), "rb")
+                m = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+                self._files[pack_id] = f
+                self._mmaps[pack_id] = m
+        return m
+
+    def get_chunk(self, ref: ChunkRef) -> bytes:
+        """Single-chunk (demand-paged) read."""
+        if ref.zero:
+            return b"\x00" * ref.size
+        loc = self._index[ref.digest]
+        m = self._pack_mmap(loc.pack)
+        return m[loc.offset : loc.offset + loc.size]
+
+    def read_batch(
+        self, refs: Sequence[ChunkRef]
+    ) -> Dict[str, bytes]:
+        """Eager (readv-style) batched read.
+
+        Reads are grouped per pack and issued in offset order with adjacent
+        ranges coalesced — the `readv` of the paper's eager restoration.
+        Returns digest -> payload (zero chunks excluded; caller synthesizes).
+        """
+        by_pack: Dict[str, List[ChunkLoc]] = {}
+        wanted: Dict[Tuple[str, int], str] = {}
+        for ref in refs:
+            if ref.zero:
+                continue
+            loc = self._index[ref.digest]
+            by_pack.setdefault(loc.pack, []).append(loc)
+            wanted[(loc.pack, loc.offset)] = ref.digest
+        out: Dict[str, bytes] = {}
+        for pack_id, locs in by_pack.items():
+            locs.sort(key=lambda l: l.offset)
+            path = os.path.join(self.root, "packs", f"{pack_id}.pack")
+            with open(path, "rb", buffering=0) as f:
+                # coalesce adjacent/overlapping ranges into sequential reads
+                i = 0
+                n = len(locs)
+                while i < n:
+                    start = locs[i].offset
+                    end = locs[i].offset + locs[i].size
+                    j = i + 1
+                    while j < n and locs[j].offset <= end + 64 * 1024:
+                        end = max(end, locs[j].offset + locs[j].size)
+                        j += 1
+                    f.seek(start)
+                    blob = f.read(end - start)
+                    for k in range(i, j):
+                        l = locs[k]
+                        d = wanted[(pack_id, l.offset)]
+                        out[d] = blob[l.offset - start : l.offset - start + l.size]
+                    i = j
+        return out
+
+    def close(self) -> None:
+        with self._lock:
+            for m in self._mmaps.values():
+                m.close()
+            for f in self._files.values():
+                f.close()  # type: ignore[attr-defined]
+            self._mmaps.clear()
+            self._files.clear()
+
+    def drop_page_cache(self) -> None:
+        """Evict pack pages from the OS page cache so benchmark reads hit
+        the storage medium (closes mmaps first; they pin pages)."""
+        self.close()
+        pack_dir = os.path.join(self.root, "packs")
+        for name in os.listdir(pack_dir):
+            path = os.path.join(pack_dir, name)
+            fd = os.open(path, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+                os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+            finally:
+                os.close(fd)
+
+
+def chunk_payloads(
+    buf: memoryview, chunk_bytes: int = DEFAULT_CHUNK_BYTES
+) -> List[memoryview]:
+    """Split a serialized array buffer into chunk payload views."""
+    return [buf[i : i + chunk_bytes] for i in range(0, len(buf), chunk_bytes)]

@@ -1,0 +1,259 @@
+"""First-principles cold-start model (paper Eq. 1) and the restore planner.
+
+    T_cold = max(c, bytes_unique / bw_store) + init + n_shared_faults · lat_mem
+
+On the TPU fleet the same structure holds with one extra pipelined phase —
+host→HBM DMA — folded into the ``max`` (both are restore bandwidth phases and
+overlap, §3.2 "only the first two steps can occur concurrently"):
+
+    T_cold = max(c, bytes_unique / bw_store, bytes_resident / bw_dma)
+             + init + n_shared_faults · lat_host
+
+The planner uses this model to (a) predict per-strategy cold-start latency
+(validated against measured numbers in ``benchmarks/bench_breakdown.py``),
+and (b) choose eager-vs-lazy placement per chunk.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .snapshot import ResolvedArray
+from .workingset import WorkingSet
+
+Path = str
+
+
+@dataclass(frozen=True)
+class StorageModel:
+    """Hardware constants of a deployment tier."""
+
+    name: str
+    bw_store: float      # bytes/s — streaming bandwidth of the diff store
+    lat_store: float     # s — per-request random-read latency of the store
+    bw_mem: float        # bytes/s — host RAM copy bandwidth
+    lat_mem: float       # s — host RAM access latency (CoW fault service)
+    bw_dma: float        # bytes/s — host→device (HBM) DMA bandwidth
+    preconfig: float     # s — constant instance pre-configuration cost (c)
+
+    def eager_time(self, nbytes: int, nchunks: int = 1) -> float:
+        """One batched sequential read (readv)."""
+        if nbytes == 0:
+            return 0.0
+        return self.lat_store + nbytes / self.bw_store
+
+    def demand_time(self, nbytes: int, nchunks: int) -> float:
+        """Synchronous per-chunk faults: latency-dominated."""
+        return nchunks * self.lat_store + nbytes / self.bw_store
+
+    def cow_time(self, nbytes: int, nfaults: int) -> float:
+        return nfaults * self.lat_mem + nbytes / self.bw_mem
+
+
+# --- presets ---------------------------------------------------------------
+
+# The paper's evaluation hardware: SATA SSD, 500 MB/s seq read, 50 us random.
+PAPER_C220G5 = StorageModel(
+    name="paper-c220g5", bw_store=500e6, lat_store=50e-6,
+    bw_mem=60e9, lat_mem=100e-9, bw_dma=60e9, preconfig=5e-3,
+)
+
+# TPU v5e host tiers (targets for deployment; dry-run constants).
+TPU_LOCAL_SSD = StorageModel(
+    name="tpu-local-ssd", bw_store=3.0e9, lat_store=80e-6,
+    bw_mem=80e9, lat_mem=100e-9, bw_dma=32e9, preconfig=3e-3,
+)
+TPU_OBJECT_STORE = StorageModel(
+    name="tpu-object-store", bw_store=1.2e9, lat_store=5e-3,
+    bw_mem=80e9, lat_mem=100e-9, bw_dma=32e9, preconfig=3e-3,
+)
+
+
+def calibrate_container(tmpdir: str, nbytes: int = 64 * 1024 * 1024) -> StorageModel:
+    """Measure this container's actual constants (used by the real benches)."""
+    import os
+    import time
+
+    import numpy as np
+
+    path = os.path.join(tmpdir, "calib.bin")
+    buf = np.random.randint(0, 255, nbytes, dtype=np.uint8)
+    with open(path, "wb") as f:
+        f.write(buf.tobytes())
+        os.fsync(f.fileno())
+
+    def _drop():
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+        finally:
+            os.close(fd)
+
+    # sequential read bandwidth — from the medium, not the page cache
+    _drop()
+    t0 = time.perf_counter()
+    with open(path, "rb", buffering=0) as f:
+        f.read()
+    bw = nbytes / (time.perf_counter() - t0)
+    # random chunk latency (cache dropped each probe)
+    lats = []
+    with open(path, "rb", buffering=0) as f:
+        for i in range(16):
+            _drop()
+            f.seek((i * 9973 * 4096) % (nbytes - 4096))
+            t0 = time.perf_counter()
+            f.read(4096)
+            lats.append(time.perf_counter() - t0)
+    lat = float(np.median(lats))
+    # mem copy bandwidth
+    t0 = time.perf_counter()
+    _ = buf.copy()
+    bw_mem = nbytes / (time.perf_counter() - t0)
+    os.unlink(path)
+    return StorageModel(
+        name="container-measured", bw_store=bw, lat_store=lat,
+        bw_mem=bw_mem, lat_mem=200e-9, bw_dma=bw_mem, preconfig=1e-3,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 prediction per strategy
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ColdStartPrediction:
+    strategy: str
+    A: float  # max-term constant c
+    B: float  # eager restore
+    C: float  # residual init
+    D: float  # demand + CoW during execution
+    @property
+    def total(self) -> float:
+        return max(self.A, self.B) + self.C + self.D
+
+
+@dataclass
+class SnapshotSizes:
+    """Byte-level facts the model consumes, derived from manifests."""
+
+    full_bytes: int            # all non-zero chunks (REAP's full snapshot)
+    diff_bytes: int            # unique (dirty) chunks only
+    ws_bytes: int              # diff ∩ working set
+    ws_full_bytes: int         # full-snapshot ∩ working set (REAP's eager set)
+    ws_chunks: int
+    non_ws_diff_bytes: int
+    non_ws_diff_chunks: int
+    shared_bytes: int          # base bytes mapped from RAM
+    cow_bytes: int             # shared bytes written during execution
+    cow_faults: int
+    init_compute: float        # measured function-init compute time (SEUSS C)
+    residual_init: float       # un-memoizable init (all strategies)
+    exec_demand_miss_bytes: int = 0   # WS misses observed at runtime
+    exec_demand_miss_chunks: int = 0
+
+
+def predict(strategy: str, s: SnapshotSizes, hw: StorageModel) -> ColdStartPrediction:
+    if strategy == "regular":
+        return ColdStartPrediction(
+            strategy, A=hw.preconfig,
+            B=hw.eager_time(s.full_bytes),
+            C=s.init_compute + s.residual_init, D=0.0,
+        )
+    if strategy == "reap":
+        # full-function snapshot: WS eager, the rest demand-paged at runtime.
+        return ColdStartPrediction(
+            strategy, A=hw.preconfig,
+            B=hw.eager_time(s.ws_full_bytes if s.ws_full_bytes else s.full_bytes),
+            C=s.residual_init,
+            D=hw.demand_time(s.exec_demand_miss_bytes, s.exec_demand_miss_chunks),
+        )
+    if strategy == "seuss":
+        return ColdStartPrediction(
+            strategy, A=hw.preconfig, B=0.0,
+            C=s.init_compute + s.residual_init,
+            D=hw.cow_time(s.cow_bytes, s.cow_faults),
+        )
+    if strategy == "snapfaas-":
+        return ColdStartPrediction(
+            strategy, A=hw.preconfig,
+            B=hw.eager_time(s.diff_bytes),
+            C=s.residual_init,
+            D=hw.cow_time(s.cow_bytes, s.cow_faults),
+        )
+    if strategy == "snapfaas":
+        return ColdStartPrediction(
+            strategy, A=hw.preconfig,
+            B=hw.eager_time(s.ws_bytes),
+            C=s.residual_init,
+            D=hw.cow_time(s.cow_bytes, s.cow_faults)
+            + hw.demand_time(s.exec_demand_miss_bytes, s.exec_demand_miss_chunks),
+        )
+    raise ValueError(strategy)
+
+
+def lower_bound(s: SnapshotSizes, hw: StorageModel) -> float:
+    """The paper's practical lower bound (§8): pre-config overlapped with the
+    minimal unique-byte eager read, plus irreducible init."""
+    return max(hw.preconfig, hw.eager_time(s.ws_bytes)) + s.residual_init
+
+
+# ---------------------------------------------------------------------------
+# eager/lazy placement planner
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RestorePlan:
+    eager: Set[Tuple[Path, int]]
+    lazy: Set[Tuple[Path, int]]
+    predicted_eager_s: float
+    predicted_lazy_s: float
+
+
+def plan_restore(
+    resolved: Dict[Path, ResolvedArray],
+    ws: Optional[WorkingSet],
+    hw: StorageModel,
+    *,
+    miss_access_prob: float = 0.05,
+) -> RestorePlan:
+    """Per-chunk eager/lazy decision for the diff chunks.
+
+    A chunk in the working set is accessed with probability ~1 → always
+    eager (bandwidth cost beats a guaranteed synchronous fault).  A chunk
+    outside the WS is accessed with small probability p → lazy iff
+
+        p · (lat_store + size/bw)  <  size/bw        (marginal eager cost)
+
+    which at typical p and chunk sizes keeps cold chunks on disk — exactly
+    the paper's §3.2 conclusion, now *derived* instead of assumed.
+    """
+    eager: Set[Tuple[Path, int]] = set()
+    lazy: Set[Tuple[Path, int]] = set()
+    e_bytes = 0
+    lazy_cost = 0.0
+    for path, ra in resolved.items():
+        for idx in ra.dirty_indices():
+            _, ref = ra.sources[idx]
+            if ref.zero:
+                continue
+            key = (path, idx)
+            in_ws = ws is None or key in ws
+            if in_ws:
+                eager.add(key)
+                e_bytes += ref.size
+            else:
+                p = miss_access_prob
+                cost_if_lazy = p * (hw.lat_store + ref.size / hw.bw_store)
+                cost_if_eager = ref.size / hw.bw_store
+                if cost_if_lazy < cost_if_eager:
+                    lazy.add(key)
+                    lazy_cost += cost_if_lazy
+                else:
+                    eager.add(key)
+                    e_bytes += ref.size
+    return RestorePlan(
+        eager=eager, lazy=lazy,
+        predicted_eager_s=hw.eager_time(e_bytes),
+        predicted_lazy_s=lazy_cost,
+    )

@@ -1,0 +1,215 @@
+"""Zygote registry: base snapshots per runtime family + function lifecycle.
+
+This is the worker-side realization of the paper's Fig. 4 workflow:
+
+* **system bootstrap** — ``register_runtime`` generates a base snapshot per
+  supported runtime (architecture family) and loads it into the in-RAM pool
+  (the cluster manager's replication step).
+* **function registration** — ``register_function`` converts the variant's
+  source into a diff snapshot against the family base, then invokes it once
+  with mock arguments under access tracking to produce the WS file.
+* **client request (cold)** — ``cold_start`` restores an instance using the
+  requested strategy; the controller (serving layer) then executes.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .chunkstore import DEFAULT_CHUNK_BYTES, ChunkStore
+from .metrics import ColdStartMetrics
+from .planner import SnapshotSizes, StorageModel
+from .restore import (
+    BasePool,
+    RestoredInstance,
+    restore_layered,
+    restore_reap,
+    restore_regular,
+    restore_seuss,
+)
+from .snapshot import (
+    SnapshotManifest,
+    flatten_pytree,
+    resolve,
+    take_diff_snapshot,
+    take_snapshot,
+)
+from .workingset import AccessLog, WorkingSet, build_working_set
+
+Path = str
+
+STRATEGIES = ("regular", "reap", "seuss", "snapfaas-", "snapfaas")
+
+
+@dataclass
+class FunctionRecord:
+    name: str
+    runtime: str
+    diff: SnapshotManifest
+    full: SnapshotManifest              # REAP baseline needs a full snapshot
+    ws: Optional[WorkingSet] = None     # over the diff (SnapFaaS)
+    ws_full: Optional[WorkingSet] = None  # over the full snapshot (REAP)
+    source_path: str = ""               # original checkpoint (SEUSS/regular)
+    init_compute_s: float = 0.0         # measured function-init compute
+
+
+class ZygoteRegistry:
+    """One per worker. Owns the chunk store, base pools and function records."""
+
+    def __init__(self, root: str, chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.store = ChunkStore(os.path.join(root, "store"))
+        self.chunk_bytes = chunk_bytes
+        self.bases: Dict[str, SnapshotManifest] = {}
+        self.pools: Dict[str, BasePool] = {}
+        self.functions: Dict[str, FunctionRecord] = {}
+
+    # -- bootstrap ----------------------------------------------------------
+
+    def register_runtime(
+        self,
+        family: str,
+        base_tree: Any,
+        *,
+        device_state: Optional[Dict[str, Any]] = None,
+        mesh_fingerprint: str = "",
+    ) -> SnapshotManifest:
+        base = take_snapshot(
+            self.store, f"base-{family}", base_tree,
+            kind="base", runtime=family, mesh_fingerprint=mesh_fingerprint,
+            device_state=device_state, chunk_bytes=self.chunk_bytes,
+        )
+        base.save(self.root)
+        self.bases[family] = base
+        self.pools[family] = BasePool.load(self.store, base)
+        return base
+
+    # -- registration ---------------------------------------------------------
+
+    def register_function(
+        self,
+        name: str,
+        family: str,
+        variant_tree: Any,
+        *,
+        source_path: str = "",
+        device_state: Optional[Dict[str, Any]] = None,
+    ) -> FunctionRecord:
+        base = self.bases[family]
+        flat = flatten_pytree(variant_tree) if not _flat(variant_tree) else variant_tree
+        diff = take_diff_snapshot(
+            self.store, f"diff-{name}", flat, base, device_state=device_state,
+        )
+        diff.save(self.root)
+        full = take_snapshot(
+            self.store, f"full-{name}", flat,
+            kind="full", runtime=family, device_state=device_state,
+            chunk_bytes=self.chunk_bytes,
+        )
+        full.save(self.root)
+        rec = FunctionRecord(
+            name=name, runtime=family, diff=diff, full=full, source_path=source_path,
+        )
+        self.functions[name] = rec
+        return rec
+
+    def generate_working_set(self, name: str, log: AccessLog) -> None:
+        """Mock invocation already happened under ``log``; cut WS files."""
+        rec = self.functions[name]
+        base = self.bases[rec.runtime]
+        rec.ws = build_working_set(rec.diff.snapshot_id, resolve(base, rec.diff), log)
+        rec.ws.save(self.root)
+        rec.ws_full = build_working_set(
+            rec.full.snapshot_id, resolve(None, rec.full), log
+        )
+        rec.ws_full.save(self.root)
+
+    # -- cold start -----------------------------------------------------------
+
+    def cold_start(
+        self,
+        name: str,
+        strategy: str,
+        *,
+        residual_init: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None,
+        source_loader: Optional[Callable[[], Dict[Path, np.ndarray]]] = None,
+        base_loader: Optional[Callable[[], Dict[Path, np.ndarray]]] = None,
+    ) -> RestoredInstance:
+        rec = self.functions[name]
+        base = self.bases[rec.runtime]
+        pool = self.pools[rec.runtime]
+        if strategy == "snapfaas":
+            if rec.ws is None:
+                raise ValueError(f"{name}: no working set; run generate_working_set")
+            return restore_layered(
+                self.store, base, rec.diff, pool,
+                working_set=rec.ws, residual_init=residual_init, function=name,
+            )
+        if strategy == "snapfaas-":
+            return restore_layered(
+                self.store, base, rec.diff, pool,
+                working_set=None, residual_init=residual_init, function=name,
+            )
+        if strategy == "reap":
+            return restore_reap(
+                self.store, rec.full, working_set=rec.ws_full,
+                residual_init=residual_init, function=name,
+            )
+        if strategy == "seuss":
+            assert source_loader is not None, "seuss needs a source loader"
+            return restore_seuss(
+                self.store, base, pool,
+                source_loader=source_loader, residual_init=residual_init,
+                function=name,
+            )
+        if strategy == "regular":
+            assert source_loader is not None and base_loader is not None
+            return restore_regular(
+                source_loader=source_loader, base_loader=base_loader,
+                residual_init=residual_init, function=name,
+            )
+        raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+
+    # -- model facts ------------------------------------------------------------
+
+    def sizes(self, name: str, *, residual_init_s: float = 0.0) -> SnapshotSizes:
+        rec = self.functions[name]
+        base = self.bases[rec.runtime]
+        resolved = resolve(base, rec.diff)
+        diff_bytes = rec.diff.stored_bytes()
+        ws_bytes = rec.ws.bytes_for(resolved) if rec.ws is not None else diff_bytes
+        full_resolved = resolve(None, rec.full)
+        ws_full_bytes = 0
+        if rec.ws_full is not None:
+            for path, idx in rec.ws_full.chunks:
+                ra = full_resolved.get(path)
+                if ra is not None and idx < len(ra.sources):
+                    _, ref = ra.sources[idx]
+                    if not ref.zero:
+                        ws_full_bytes += ref.size
+        shared = sum(
+            ra.meta.nbytes for ra in resolved.values() if not ra.dirty_indices()
+        )
+        return SnapshotSizes(
+            full_bytes=rec.full.stored_bytes(),
+            diff_bytes=diff_bytes,
+            ws_bytes=ws_bytes,
+            ws_full_bytes=ws_full_bytes,
+            ws_chunks=rec.ws.size() if rec.ws else 0,
+            non_ws_diff_bytes=max(0, diff_bytes - ws_bytes),
+            non_ws_diff_chunks=0,
+            shared_bytes=shared,
+            cow_bytes=0,
+            cow_faults=0,
+            init_compute=rec.init_compute_s,
+            residual_init=residual_init_s,
+        )
+
+
+def _flat(tree: Any) -> bool:
+    return isinstance(tree, dict) and all(isinstance(v, np.ndarray) for v in tree.values())

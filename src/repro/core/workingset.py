@@ -1,0 +1,126 @@
+"""Working-set estimation (REAP-style, paper §4.2).
+
+REAP restores a snapshot fully on-demand once, records which pages fault in,
+and on subsequent cold-starts eagerly prefetches exactly that set.  In a
+managed array runtime there are no hardware page faults to trap, so the
+equivalent observation channel is *cooperative access tracking*: the serving
+runtime materializes arrays through :class:`AccessLog`, which records which
+arrays — and for gather-type accesses (embedding rows, MoE expert blocks)
+which *row ranges* — a profiled request actually touches.
+
+The resulting :class:`WorkingSet` is the paper's WS file: a set of
+(array path, chunk index) pairs over the *diff* snapshot (SnapFaaS only
+applies WS to diffs, §4.2 — base chunks are in RAM already, prefetching them
+from disk is meaningless).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .snapshot import ArrayMeta, ResolvedArray
+
+Path = str
+ChunkKey = Tuple[Path, int]
+
+
+@dataclass
+class AccessLog:
+    """Records which parts of which arrays an execution touched."""
+
+    touched_full: Set[Path] = field(default_factory=set)
+    touched_rows: Dict[Path, Set[int]] = field(default_factory=dict)
+
+    def touch(self, path: Path) -> None:
+        """The whole array was (potentially) read."""
+        self.touched_full.add(path)
+
+    def touch_rows(self, path: Path, rows: Iterable[int]) -> None:
+        """Only these leading-axis rows were read (embedding gather, expert
+        dispatch).  Overrides ``touch`` for the same path."""
+        self.touched_rows.setdefault(path, set()).update(int(r) for r in rows)
+
+    def merge(self, other: "AccessLog") -> None:
+        self.touched_full |= other.touched_full
+        for p, rows in other.touched_rows.items():
+            self.touched_rows.setdefault(p, set()).update(rows)
+
+
+def rows_to_chunks(meta: ArrayMeta, rows: Iterable[int]) -> Set[int]:
+    """Map touched leading-axis rows to chunk indices of the byte stream."""
+    if not meta.shape:
+        return {0}
+    row_bytes = meta.nbytes // max(1, meta.shape[0])
+    out: Set[int] = set()
+    for r in rows:
+        lo = r * row_bytes
+        hi = (r + 1) * row_bytes
+        out.update(range(lo // meta.chunk_bytes, (hi - 1) // meta.chunk_bytes + 1))
+    return out
+
+
+@dataclass
+class WorkingSet:
+    """The WS file: diff-snapshot chunks observed in one profiled run."""
+
+    snapshot_id: str
+    chunks: FrozenSet[ChunkKey]
+
+    def __contains__(self, key: ChunkKey) -> bool:
+        return key in self.chunks
+
+    def size(self) -> int:
+        return len(self.chunks)
+
+    def bytes_for(self, resolved: Dict[Path, ResolvedArray]) -> int:
+        total = 0
+        for path, idx in self.chunks:
+            ra = resolved.get(path)
+            if ra is None or idx >= len(ra.sources):
+                continue
+            src, ref = ra.sources[idx]
+            if src == "diff" and not ref.zero:
+                total += ref.size
+        return total
+
+    def save(self, root: str) -> str:
+        os.makedirs(os.path.join(root, "ws"), exist_ok=True)
+        p = os.path.join(root, "ws", f"{self.snapshot_id}.json")
+        with open(p, "w") as f:
+            json.dump({"snapshot_id": self.snapshot_id,
+                       "chunks": sorted([list(c) for c in self.chunks])}, f)
+        return p
+
+    @staticmethod
+    def load(root: str, snapshot_id: str) -> "WorkingSet":
+        p = os.path.join(root, "ws", f"{snapshot_id}.json")
+        with open(p) as f:
+            o = json.load(f)
+        return WorkingSet(
+            snapshot_id=o["snapshot_id"],
+            chunks=frozenset((c[0], int(c[1])) for c in o["chunks"]),
+        )
+
+
+def build_working_set(
+    snapshot_id: str,
+    resolved: Dict[Path, ResolvedArray],
+    log: AccessLog,
+) -> WorkingSet:
+    """Convert an access log into a WS over the *diff* chunks only."""
+    keys: Set[ChunkKey] = set()
+    for path, ra in resolved.items():
+        dirty = set(ra.dirty_indices())
+        if not dirty:
+            continue
+        if path in log.touched_rows:
+            touched = rows_to_chunks(ra.meta, log.touched_rows[path])
+            keys.update((path, i) for i in touched & dirty)
+        elif path in log.touched_full:
+            keys.update((path, i) for i in dirty)
+    return WorkingSet(snapshot_id=snapshot_id, chunks=frozenset(keys))

@@ -1,0 +1,2 @@
+from .sharding import MeshAxes, Rules, fingerprint, mesh_axes
+from .act import default_rules, logical_axis_rules, shard

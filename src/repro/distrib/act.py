@@ -1,0 +1,116 @@
+"""Activation sharding constraints via logical axis names.
+
+GSPMD propagation alone drops the batch sharding inside attention blocks
+(observed on the dry-run: f32[256,4096,…] full-global-batch temps, 44 GB of
+them per device).  Models therefore annotate activations with *logical* axis
+names; the launch layer binds a logical→mesh mapping before tracing.
+
+Outside any binding (unit tests on CPU), ``shard`` is the identity.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+_BINDING: ContextVar[Optional[Tuple[Mesh, Dict[str, Axis]]]] = ContextVar(
+    "repro_act_sharding", default=None
+)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: Dict[str, Axis]):
+    token = _BINDING.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _BINDING.reset(token)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x`` so dim i is sharded per the logical axis name.
+
+    Dims that do not divide the mapped mesh axes degrade to replication —
+    this is what lets batch=1 long-context cells and odd vocab sizes reuse
+    the same annotations."""
+    bound = _BINDING.get()
+    if bound is None:
+        return x
+    mesh, rules = bound
+    if len(logical) != x.ndim:
+        return x
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        axis = rules.get(name) if name is not None else None
+        if axis is not None:
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if size == 0 or dim % size != 0:
+                axis = None
+        spec.append(axis)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def current_binding():
+    """(mesh, rules) of the active logical-axis binding, or None."""
+    return _BINDING.get()
+
+
+def batch_shards() -> int:
+    """Number of batch-axis shards in the current binding (1 if unbound).
+    MoE uses this as the GShard group count G."""
+    bound = _BINDING.get()
+    if bound is None:
+        return 1
+    mesh, rules = bound
+    axis = rules.get("moe_group") or rules.get("batch")
+    if axis is None:
+        return 1
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def default_rules(mesh: Mesh, cfg, *, batch: int,
+                  weight_fsdp: bool = True) -> Dict[str, Axis]:
+    """Logical→mesh mapping for a model config on a mesh (see Rules)."""
+    from repro.distrib.sharding import Rules
+
+    r = Rules(mesh, weight_fsdp=weight_fsdp)
+    return {
+        "moe_weight_fsdp": r.wf,
+        "batch": r.batch_if(batch),
+        "seq": None,
+        "embed": None,
+        "heads": r.model_if(cfg.num_heads),
+        "kv_heads": r.model_if(cfg.num_kv_heads),
+        "head_dim": None,
+        # KV caches shard head_dim when kv_heads can't take the model axis
+        "cache_hd": (r.model_if(cfg.head_dim)
+                     if r.model_if(cfg.num_kv_heads) is None else None),
+        "ffn": r.model_if(cfg.d_ff) if cfg.d_ff else None,
+        "ffn2": r.model_if(2 * cfg.d_ff) if cfg.d_ff else None,
+        "qkv_heads": r.model_if(cfg.num_heads + 2 * cfg.num_kv_heads),
+        # experts on "model" when E divides it (EP); otherwise TP the expert
+        # hidden dim instead — never both on the same mesh axis.
+        "experts": (r.model_if(cfg.num_experts) if cfg.num_experts else None),
+        "moe_ffn": (
+            r.model_if(cfg.moe_d_ff)
+            if cfg.num_experts and r.model_if(cfg.num_experts) is None
+            else None
+        ),
+        "moe_cap": r.ax.batch,
+        "moe_group": r.ax.batch,
+        "inner": r.model_if(cfg.d_inner) if cfg.ssm_state else None,
+        "vocab": r.model_if(cfg.vocab_size),
+    }

@@ -1,0 +1,247 @@
+"""Sharding rules: map every parameter / batch / cache tensor to a
+PartitionSpec over the production mesh.
+
+Strategy (MaxText-style 2-D sharding):
+
+* weights: FSDP over the batch axes ("pod","data") × TP over "model"
+  (heads / ffn / experts / vocab on the model axis)
+* activations: batch over ("pod","data")
+* MoE experts: expert-parallel over "model" when E divides the axis,
+  otherwise TP inside each expert (grok-1: E=8 < 16)
+* decode caches: batch over "data" when divisible; long-context batch=1
+  cells shard the *sequence* axis instead (ring-style KV sharding)
+
+Every rule degrades to replication when a dimension does not divide the
+axis — mesh-shape portability is what makes elastic restore possible.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.blocks import build_plan
+from repro.models.config import LayerKind, ModelConfig
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    batch: Tuple[str, ...]  # ("pod","data") or ("data",)
+    model: str = "model"
+
+
+def mesh_axes(mesh: Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    batch = tuple(n for n in names if n in ("pod", "data"))
+    return MeshAxes(batch=batch)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _batch_size(mesh: Mesh, axes: MeshAxes) -> int:
+    return int(np.prod([_axis_size(mesh, a) for a in axes.batch]))
+
+
+class Rules:
+    """PartitionSpec factory bound to a concrete mesh.
+
+    ``weight_fsdp=False`` switches to the serving layout: weights are TP-only
+    (no per-use all-gather over the batch axes).  Training keeps FSDP —
+    without an optimizer, serving never amortizes the re-gathers (measured:
+    a 12B decode step spent 465 ms re-gathering weights it uses for 1 token).
+    """
+
+    def __init__(self, mesh: Mesh, *, weight_fsdp: bool = True):
+        self.mesh = mesh
+        self.ax = mesh_axes(mesh)
+        self.model_size = _axis_size(mesh, self.ax.model)
+        self.batch_size = _batch_size(mesh, self.ax)
+        self.weight_fsdp = weight_fsdp
+        # the axes weight storage is sharded over (beyond "model")
+        self.wf = self.ax.batch if weight_fsdp else None
+
+    # -- helpers -----------------------------------------------------------
+
+    def model_if(self, dim: int) -> Optional[str]:
+        return self.ax.model if dim % self.model_size == 0 else None
+
+    def batch_if(self, dim: int):
+        return self.ax.batch if dim % self.batch_size == 0 else None
+
+    def spec(self, *axes) -> P:
+        return P(*axes)
+
+    # -- parameter specs -----------------------------------------------------
+
+    def _norm_spec(self, p: PyTree) -> PyTree:
+        return jax.tree.map(lambda _: P(), p)
+
+    def layer_specs(self, cfg: ModelConfig, kind: LayerKind, stacked: bool,
+                    cross: bool = False) -> Dict[str, Any]:
+        L = (None,) if stacked else ()
+        fsdp = self.wf
+        m = self.ax.model
+        out: Dict[str, Any] = {"ln1": {"scale": P(*L)}}
+        if cfg.norm == "layernorm":
+            out["ln1"]["bias"] = P(*L)
+        if kind.mixer == "attn":
+            kv_m = self.model_if(cfg.num_kv_heads)
+            h_m = self.model_if(cfg.num_heads)  # whisper: 12 heads / 16-way
+            out["wq"] = P(*L, fsdp, h_m, None)
+            out["wk"] = P(*L, fsdp, kv_m, None)
+            out["wv"] = P(*L, fsdp, kv_m, None)
+            out["wo"] = P(*L, h_m, None, fsdp)
+        else:
+            d_in_m = self.model_if(cfg.d_inner)
+            out["w_z"] = P(*L, fsdp, d_in_m)
+            out["w_xBC"] = P(*L, fsdp, None)
+            out["w_dt"] = P(*L, fsdp, None)
+            out["dt_bias"] = P(*L)
+            out["conv_w"] = P(*L, None, None)
+            out["conv_b"] = P(*L)
+            out["A_log"] = P(*L)
+            out["D"] = P(*L)
+            out["gate_norm"] = P(*L)
+            out["w_out"] = P(*L, d_in_m, fsdp)
+        if cross:
+            kv_m = self.model_if(cfg.num_kv_heads)
+            h_m = self.model_if(cfg.num_heads)
+            out["ln_cross"] = {"scale": P(*L)}
+            if cfg.norm == "layernorm":
+                out["ln_cross"]["bias"] = P(*L)
+            out["cq"] = P(*L, fsdp, h_m, None)
+            out["ck"] = P(*L, fsdp, kv_m, None)
+            out["cv"] = P(*L, fsdp, kv_m, None)
+            out["co"] = P(*L, h_m, None, fsdp)
+        if kind.ffn != "none":
+            out["ln2"] = {"scale": P(*L)}
+            if cfg.norm == "layernorm":
+                out["ln2"]["bias"] = P(*L)
+            if kind.ffn == "moe":
+                E = cfg.num_experts
+                # routers are tiny and read by every shard → replicated
+                if E % self.model_size == 0:
+                    # expert parallelism
+                    ffn = {
+                        "router": P(*L, None, None),
+                        "w_in": P(*L, m, fsdp, None),
+                        "w_out": P(*L, m, None, fsdp),
+                    }
+                    if cfg.mlp_gated:
+                        ffn["w_gate"] = P(*L, m, fsdp, None)
+                else:
+                    # TP inside each expert (grok-1: 8 experts on a 16 axis)
+                    ffn = {
+                        "router": P(*L, None, None),
+                        "w_in": P(*L, None, fsdp, m),
+                        "w_out": P(*L, None, m, fsdp),
+                    }
+                    if cfg.mlp_gated:
+                        ffn["w_gate"] = P(*L, None, fsdp, m)
+                out["ffn"] = ffn
+            else:
+                out["ffn"] = {
+                    "w_in": P(*L, fsdp, m),
+                    "w_out": P(*L, m, fsdp),
+                }
+                if cfg.mlp_gated:
+                    out["ffn"]["w_gate"] = P(*L, fsdp, m)
+        return out
+
+    def param_specs(self, cfg: ModelConfig) -> PyTree:
+        plan = build_plan(cfg)
+        fsdp = self.wf
+        v_m = self.model_if(cfg.vocab_size)
+        specs: Dict[str, Any] = {
+            "embed": {"table": P(v_m, fsdp)},
+            "final_norm": {"scale": P()},
+        }
+        if cfg.norm == "layernorm":
+            specs["final_norm"]["bias"] = P()
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = {"w": P(fsdp, v_m)}
+        if cfg.is_encoder_decoder:
+            enc_kind = LayerKind("attn", "mlp")
+            specs["enc"] = {
+                "blocks": {"pos0": self.layer_specs(cfg, enc_kind, True)},
+                "final_norm": {"scale": P()},
+            }
+            if cfg.norm == "layernorm":
+                specs["enc"]["final_norm"]["bias"] = P()
+            specs["blocks"] = {
+                "pos0": self.layer_specs(cfg, enc_kind, True, cross=True)
+            }
+        else:
+            specs["blocks"] = {
+                f"pos{i}": self.layer_specs(cfg, kind, True)
+                for i, kind in enumerate(plan.kinds)
+            }
+        return specs
+
+    # -- batch / cache specs ----------------------------------------------------
+
+    def batch_specs(self, cfg: ModelConfig, *, batch: int, with_labels: bool,
+                    prefix: bool) -> Dict[str, Any]:
+        b = self.batch_if(batch)
+        out: Dict[str, Any] = {"tokens": P(b, None)}
+        if with_labels:
+            out["labels"] = P(b, None)
+        if prefix:
+            out["prefix_embeds"] = P(b, None, None)
+        return out
+
+    def cache_specs(self, cfg: ModelConfig, *, batch: int) -> PyTree:
+        """Specs matching Model.init_cache structure."""
+        plan = build_plan(cfg)
+        b = self.batch_if(batch)
+        kv_m = self.model_if(cfg.num_kv_heads)
+        # kv_heads that don't divide the model axis (GQA kv=8 on a 16-way
+        # axis) would REPLICATE a 32k-token cache: shard head_dim instead
+        # (decode contracts over it → small psum).
+        hd_m = self.model_if(cfg.head_dim) if kv_m is None else None
+        # batch=1 long-context: shard the sequence axis instead of batch
+        seq = self.ax.batch if b is None else None
+        out: Dict[str, Any] = {}
+        if cfg.is_encoder_decoder:
+            out["pos0"] = {
+                "k": P(None, b, seq, kv_m, hd_m),
+                "v": P(None, b, seq, kv_m, hd_m),
+                "ck": P(None, b, seq, kv_m, hd_m),
+                "cv": P(None, b, seq, kv_m, hd_m),
+            }
+            return out
+        for i, kind in enumerate(plan.kinds):
+            if kind.mixer == "attn":
+                out[f"pos{i}"] = {
+                    "k": P(None, b, seq, kv_m, hd_m),
+                    "v": P(None, b, seq, kv_m, hd_m),
+                }
+            else:
+                nh_m = self.model_if(cfg.ssm_heads)
+                ch_m = self.model_if(cfg.d_inner + 2 * cfg.ssm_state)
+                out[f"pos{i}"] = {
+                    "conv": P(None, b, None, ch_m),
+                    "ssm": P(None, b, nh_m, None, None),
+                }
+        return out
+
+    # -- conversions -------------------------------------------------------------
+
+    def named(self, spec_tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+
+def fingerprint(mesh: Mesh) -> str:
+    """Topology fingerprint recorded in snapshots (DESIGN.md §6 coupling)."""
+    return "x".join(f"{n}={mesh.shape[n]}" for n in mesh.axis_names)

@@ -1,0 +1,3 @@
+from .kernel import decode_attention_int8
+from .ops import decode_attention_int8_op
+from .ref import decode_attention_int8_ref, dequantize_kv, quantize_kv

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the int8-KV decode-attention kernel."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def quantize_kv(k: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(b, S, nkv, hd) → int8 values + per-(position, head) f32 scales."""
+    scale = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def decode_attention_int8_ref(q, k, k_scale, v, v_scale, pos, *, scale):
+    """Dequantize-then-attend oracle (identical math, O(S) memory)."""
+    b, nh, hd = q.shape
+    _, S, nkv, _ = k.shape
+    rep = nh // nkv
+    kf = dequantize_kv(k, k_scale)
+    vf = dequantize_kv(v, v_scale)
+    qr = q.reshape(b, nkv, rep, hd).astype(jnp.float32)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qr, kf) * scale
+    mask = jnp.arange(S) <= pos
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p, vf)
+    return o.reshape(b, nh, hd).astype(q.dtype)

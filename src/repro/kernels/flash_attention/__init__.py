@@ -1,0 +1,3 @@
+from .kernel import flash_attention
+from .ops import flash_attention_op
+from .ref import attention_ref

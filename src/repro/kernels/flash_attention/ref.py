@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash-attention kernel (O(S²) memory)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (b, nh, S, hd)
+    k: jax.Array,  # (b, nkv, S, hd)
+    v: jax.Array,  # (b, nkv, S, hd)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    b, nh, S, hd = q.shape
+    _, nkv, Sk, _ = k.shape
+    rep = nh // nkv
+    qr = q.reshape(b, nkv, rep, S, hd)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    allowed = jnp.ones((S, Sk), dtype=bool)
+    if causal:
+        allowed = allowed & (kp <= qp)
+    if window > 0:
+        allowed = allowed & (qp - kp < window)
+    s = jnp.where(allowed[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bgkd->bgrqd", p, v.astype(jnp.float32))
+    return o.reshape(b, nh, S, hd).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .kernel import patch_apply
+from .ops import patch_apply_op
+from .ref import patch_apply_ref

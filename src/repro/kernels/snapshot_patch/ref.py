@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the snapshot patch-apply kernel."""
+
+import jax.numpy as jnp
+
+
+def patch_apply_ref(base, diff, sel, *, mode="replace", scale=1.0):
+    use = (sel >= 0)
+    picked = jnp.take(diff, jnp.maximum(sel, 0), axis=0)
+    if mode == "replace":
+        return jnp.where(use[:, None], picked, base)
+    if mode == "add":
+        return base + scale * use[:, None].astype(base.dtype) * picked
+    raise ValueError(mode)

@@ -1,0 +1,3 @@
+from .kernel import ssd_scan
+from .ops import ssd_op
+from .ref import ssd_ref

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the SSD kernel: re-exports the model-stack chunked
+implementation (itself validated against a sequential token-by-token
+recurrence in tests/test_models.py)."""
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, B, C, D, *, chunk=256):
+    return ssd_chunked(x, dt, A, B, C, D, chunk=chunk)

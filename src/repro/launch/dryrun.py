@@ -1,0 +1,160 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell against the
+production meshes and extract memory/cost/collective evidence.
+
+MUST be run as its own process (the two lines above must execute before any
+jax device initialization — never import this module from a live session
+that already touched jax devices).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod-only|--singlepod-only]
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, collective stats and roofline terms —
+EXPERIMENTS.md §Dry-run/§Roofline read these.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALIASES, ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.models.config import SHAPES, cells_for
+from repro import roofline as rl
+
+
+def _memory_report(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+        "alias_size_in_bytes", "generated_code_size_in_bytes",
+        "host_argument_size_in_bytes", "host_output_size_in_bytes",
+        "host_temp_size_in_bytes", "peak_memory_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if "argument_size_in_bytes" in out:
+        out["live_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+        )
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             loss_chunk: int = 512, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    with mesh:
+        cell = build_cell(cfg, shape, mesh, loss_chunk=loss_chunk)
+        lowered = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        ).lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = _memory_report(compiled)
+    try:
+        cost = compiled.cost_analysis() or {}
+    except Exception:
+        cost = {}
+    hlo = compiled.as_text()
+    n_dev = mesh.size
+    terms = rl.analyze(
+        arch=cfg.name, shape_name=shape_name, mesh_name=mesh_name,
+        n_devices=n_dev, cost=cost, hlo_text=hlo, cfg=cfg, shape=shape,
+        memory_report=mem,
+    )
+    result = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": n_dev,
+        "ok": True,
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "roofline": rl.to_json(terms),
+        "hlo_bytes": len(hlo),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{cfg.name}__{shape_name}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    if verbose:
+        gb = mem.get("live_bytes_per_device", 0) / 2**30
+        print(
+            f"[dryrun] {cfg.name:16s} {shape_name:12s} {mesh_name:10s} "
+            f"compile={t_compile:6.1f}s live={gb:6.2f}GiB/dev "
+            f"Tc={terms.t_compute*1e3:8.2f}ms Tm={terms.t_memory*1e3:8.2f}ms "
+            f"Tx={terms.t_collective*1e3:8.2f}ms dom={terms.dominant} "
+            f"useful={terms.useful_flops_ratio:5.2f}",
+            flush=True,
+        )
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (e.g. gemma2-27b)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true", help="2x16x16 mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--loss-chunk", type=int, default=512)
+    args = ap.parse_args()
+
+    jobs = []
+    archs = ARCHS if args.all or args.arch is None else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = cells_for(cfg) if args.all or args.shape is None else [args.shape]
+        for s in shapes:
+            if args.both_meshes:
+                jobs.append((arch, s, False))
+                jobs.append((arch, s, True))
+            else:
+                jobs.append((arch, s, args.multipod))
+
+    failures = []
+    for arch, s, mp in jobs:
+        try:
+            run_cell(arch, s, multi_pod=mp, out_dir=args.out,
+                     loss_chunk=args.loss_chunk)
+        except Exception as e:  # a failure here is a bug in the system
+            failures.append((arch, s, mp, repr(e)))
+            print(f"[dryrun] FAIL {arch} {s} multipod={mp}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {failures}")
+    print(f"[dryrun] all {len(jobs)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

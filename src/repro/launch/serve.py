@@ -1,0 +1,60 @@
+"""End-to-end serving driver: cold-start strategies under a request trace.
+
+    PYTHONPATH=src python -m repro.launch.serve --family gemma-2b \
+        --functions 6 --requests 40 --cold-fraction 0.5
+
+Boots a worker (zygote registry + instance pool), registers N function
+variants of the family's reduced config, replays a request trace with the
+given cold fraction for every strategy, and prints the paper-style
+boot/exec/e2e comparison (Fig. 5 on live hardware — this container).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving.trace import build_functions, replay_trace, summarize
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", default="gemma-2b")
+    ap.add_argument("--functions", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--cold-fraction", type=float, default=0.5)
+    ap.add_argument("--strategies", nargs="*",
+                    default=["regular", "reap", "seuss", "snapfaas-", "snapfaas"])
+    ap.add_argument("--root", default=None)
+    args = ap.parse_args()
+
+    root = args.root or tempfile.mkdtemp(prefix="repro_serve_")
+    cfg = reduced(get_config(args.family))
+    model = build_model(cfg)
+
+    worker, fns = build_functions(root, cfg, model, n_functions=args.functions)
+    rows = []
+    for strat in args.strategies:
+        results = replay_trace(
+            worker, fns, n_requests=args.requests,
+            cold_fraction=args.cold_fraction, strategy=strat, seed=1,
+        )
+        rows.append(summarize(strat, results))
+    print(json.dumps(rows, indent=1))
+    base = {r["strategy"]: r for r in rows}
+    if "snapfaas" in base and "reap" in base:
+        sp = base["reap"]["cold_e2e_ms"] / max(base["snapfaas"]["cold_e2e_ms"], 1e-9)
+        print(f"snapfaas speedup over reap (cold e2e): {sp:.2f}x")
+    if "snapfaas" in base and "seuss" in base:
+        sp = base["seuss"]["cold_e2e_ms"] / max(base["snapfaas"]["cold_e2e_ms"], 1e-9)
+        print(f"snapfaas speedup over seuss (cold e2e): {sp:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

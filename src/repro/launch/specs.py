@@ -1,0 +1,245 @@
+"""Per-(arch × shape) lowering cells: ShapeDtypeStruct inputs + shardings.
+
+``input_specs`` builds weak-type-correct, shardable stand-ins for every model
+input — no device allocation — and ``build_cell`` assembles the jit'able
+(fn, args, in/out shardings) tuple the dry-run lowers and compiles.
+
+Shape semantics per the assignment:
+  * train_*   → train_step(state, batch) on (global_batch, seq_len) tokens
+  * prefill_* → prefill_step(params, batch) building a seq_len cache
+  * decode_*  → serve_step(params, cache, token, pos): ONE new token against
+                a seq_len KV cache (SSM archs: constant-size state instead)
+  * enc-dec (whisper): frames = seq_len stub embeddings, text = seq_len // 8
+  * vlm (paligemma): 256 stub patch embeddings + (seq_len − 256) text tokens
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distrib.sharding import Rules
+from repro.models import Model, build_model
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import OptimizerConfig, opt_state_specs
+from repro.launch.steps import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    train_state_shapes,
+)
+
+PyTree = Any
+
+
+def st(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def dec_len(cfg: ModelConfig, seq: int) -> int:
+    """Text length for enc-dec archs (encoder takes the full seq_len)."""
+    return max(seq // 8, 64)
+
+
+def batch_structs(cfg: ModelConfig, batch: int, seq: int, *, labels: bool) -> Dict:
+    if cfg.is_encoder_decoder:
+        d = dec_len(cfg, seq)
+        out = {
+            "tokens": st((batch, d), jnp.int32),
+            "prefix_embeds": st((batch, seq, cfg.d_model), cfg.dtype),
+        }
+        if labels:
+            out["labels"] = st((batch, d), jnp.int32)
+        return out
+    if cfg.num_prefix_tokens:
+        text = seq - cfg.num_prefix_tokens
+        out = {
+            "tokens": st((batch, text), jnp.int32),
+            "prefix_embeds": st((batch, cfg.num_prefix_tokens, cfg.d_model), cfg.dtype),
+        }
+        if labels:
+            out["labels"] = st((batch, text), jnp.int32)
+        return out
+    out = {"tokens": st((batch, seq), jnp.int32)}
+    if labels:
+        out["labels"] = st((batch, seq), jnp.int32)
+    return out
+
+
+def cache_structs(model: Model, batch: int, seq: int) -> PyTree:
+    cfg = model.cfg
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(
+            lambda: model.init_cache(batch, dec_len(cfg, seq), enc_len=seq)
+        )
+    return jax.eval_shape(lambda: model.init_cache(batch, seq))
+
+
+def opt_for(cfg: ModelConfig) -> OptimizerConfig:
+    """Full f32 Adam except where it cannot fit: grok-314B uses a factored
+    second moment and bf16 gradient accumulation (params+grads+opt for 314B
+    at full f32 Adam is ~4.4 TB — more than the whole pod's HBM).
+    ZeRO-2 archs accumulate grads in bf16 (grads are bf16-valued anyway;
+    clipping + Adam absorb the rounding — §Perf log)."""
+    if cfg.name.startswith("grok"):
+        return OptimizerConfig(name="adafactor", accum_dtype="bfloat16")
+    if train_sharding(cfg) == "zero2":
+        return OptimizerConfig(name="adamw", accum_dtype="bfloat16")
+    return OptimizerConfig(name="adamw")
+
+
+def train_sharding(cfg: ModelConfig) -> str:
+    """fsdp (ZeRO-3-style, default) vs zero2 (TP-only weights + 2-D sharded
+    optimizer state).  ZeRO-2 removes the per-microbatch weight re-gathers —
+    the dominant collective for big-d_ff dense models — whenever the TP
+    weight shard itself fits (§Perf cell A)."""
+    # MEASURED (EXPERIMENTS.md §Perf cell A, iteration 1): ZeRO-2 was WORSE
+    # for gemma2-27b train_4k (Tx 20.2 s → 23.3 s): at 65k tokens/device the
+    # TP activation all-reduces (2·tok·D per layer) outweigh FSDP weight
+    # re-gathers (params×microbatches). Kept available via this switch.
+    return "fsdp"
+
+
+def microbatch_seqs(cfg: ModelConfig) -> int:
+    """Sequences per device per accumulation slice (v5e 16 GB budget)."""
+    if cfg.name.startswith("grok"):
+        return 2
+    if train_sharding(cfg) == "zero2":
+        return 1   # ZeRO-2 collectives are per-token: more microbatches are
+                   # free on the wire and shrink the remat stack
+    return 4
+
+
+def remat_group_for(cfg: ModelConfig) -> int:
+    """Two-level remat for deep stacks (v5e 16 GB budget)."""
+    from repro.models.blocks import build_plan
+    n = build_plan(cfg).n_repeat
+    return 8 if (cfg.name.startswith("grok") and n % 8 == 0) else 1
+
+
+@dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+
+
+def _bind_act_rules(fn: Callable, mesh: Mesh, cfg: ModelConfig, batch: int,
+                    weight_fsdp: bool = True) -> Callable:
+    """Wrap a step fn so tracing happens under the logical-axis binding
+    (activation sharding constraints resolve against this mesh)."""
+    from repro.distrib.act import default_rules, logical_axis_rules
+
+    rules = default_rules(mesh, cfg, batch=batch, weight_fsdp=weight_fsdp)
+
+    def wrapped(*args):
+        with logical_axis_rules(mesh, rules):
+            return fn(*args)
+
+    return wrapped
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    loss_chunk: int = 512,
+) -> Cell:
+    # serving layout: weights TP-only (no FSDP re-gathers) for non-train
+    # cells — IF the TP shard fits the HBM budget (grok-314B: 39 GiB/dev
+    # TP-only → keep FSDP and pay the per-step gather); ZeRO-2 train cells
+    # are TP-only too (opt state carries the 2-D)
+    rules0 = Rules(mesh)
+    tp_shard_bytes = 2 * cfg.param_count() / rules0.model_size  # bf16
+    serving_tp_ok = tp_shard_bytes <= 6 * 2**30
+    if shape.kind == "train":
+        weight_fsdp = train_sharding(cfg) == "fsdp"
+    else:
+        weight_fsdp = not serving_tp_ok
+    rules = Rules(mesh, weight_fsdp=weight_fsdp)
+    model = build_model(cfg, remat=(shape.kind == "train"), loss_chunk=loss_chunk,
+                        remat_group=remat_group_for(cfg))
+    pspecs = rules.param_specs(cfg)
+    named = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    B, S = shape.global_batch, shape.seq_len
+    b_ax = rules.batch_if(B)
+    v_m = rules.model_if(cfg.vocab_size)
+
+    if shape.kind == "train":
+        opt_cfg = opt_for(cfg)
+        # microbatch so each accumulation slice stays in the HBM budget
+        b_dev = max(1, B // rules.batch_size)
+        microbatches = max(1, b_dev // microbatch_seqs(cfg))
+        state_shapes = train_state_shapes(model, opt_cfg)
+        z2 = ((rules.ax.batch, rules.batch_size)
+              if train_sharding(cfg) == "zero2" else None)
+        state_specs = {
+            "params": pspecs,
+            "opt": opt_state_specs(opt_cfg.name, pspecs, state_shapes["params"],
+                                   zero2=z2),
+        }
+        bstruct = batch_structs(cfg, B, S, labels=True)
+        bspecs = {k: (P(b_ax, None) if v.ndim == 2 else P(b_ax, None, None))
+                  for k, v in bstruct.items()}
+        fn = _bind_act_rules(
+            make_train_step(model, opt_cfg, microbatches=microbatches),
+            mesh, cfg, B, weight_fsdp=weight_fsdp,
+        )
+        metrics_specs = {"loss": P(), "grad_norm": P()}
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=fn,
+            args=(state_shapes, bstruct),
+            in_shardings=(named(state_specs), named(bspecs)),
+            out_shardings=(named(state_specs), named(metrics_specs)),
+            donate_argnums=(0,),
+        )
+
+    params_shapes = jax.eval_shape(lambda: model.init(0))
+
+    if shape.kind == "prefill":
+        bstruct = batch_structs(cfg, B, S, labels=False)
+        bspecs = {k: (P(b_ax, None) if v.ndim == 2 else P(b_ax, None, None))
+                  for k, v in bstruct.items()}
+        fn = _bind_act_rules(
+            make_prefill_step(model, cache_len=S if not cfg.is_encoder_decoder
+                              else dec_len(cfg, S)),
+            mesh, cfg, B, weight_fsdp=weight_fsdp,
+        )
+        cspecs = rules.cache_specs(cfg, batch=B)
+        logits_spec = P(b_ax, None, v_m)
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=fn,
+            args=(params_shapes, bstruct),
+            in_shardings=(named(pspecs), named(bspecs)),
+            out_shardings=(named(logits_spec), named(cspecs)),
+            donate_argnums=(),
+        )
+
+    # decode
+    cstruct = cache_structs(model, B, S)
+    cspecs = rules.cache_specs(cfg, batch=B)
+    tokens = st((B,), jnp.int32)
+    pos = st((), jnp.int32)
+    fn = _bind_act_rules(make_serve_step(model), mesh, cfg, B,
+                         weight_fsdp=weight_fsdp)
+    logits_spec = P(b_ax, v_m)
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=fn,
+        args=(params_shapes, cstruct, tokens, pos),
+        in_shardings=(named(pspecs), named(cspecs), named(P(b_ax)), named(P())),
+        out_shardings=(named(logits_spec), named(cspecs)),
+        donate_argnums=(1,),
+    )

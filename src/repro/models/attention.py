@@ -1,0 +1,200 @@
+"""Attention: memory-efficient blockwise (flash-style) reference path.
+
+This is the XLA path used by training/prefill and by the multi-pod dry-run
+(Pallas lowers only for real TPUs; ``repro.kernels.flash_attention`` is the
+TPU kernel validated against this implementation in interpret mode).
+
+Features: causal / bidirectional, GQA / MQA, sliding-window (gemma-2 local
+layers), prefix-LM masks (paligemma), gemma-2 logit soft-capping.
+
+Structure: ``lax.map`` over query blocks (bounds live memory), inner
+``lax.scan`` over KV blocks with an online-softmax accumulator.  Masked-out
+KV blocks are *computed then discarded* — a deliberate baseline; skipping
+them is one of the §Perf hillclimb steps (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import softcap as _softcap
+
+NEG_INF = -1e30
+
+
+def _mask(
+    q_pos: jax.Array,  # (qb,) int32
+    k_pos: jax.Array,  # (kb,) int32
+    *,
+    causal: bool,
+    window: int,
+    prefix_len: int,
+) -> jax.Array:
+    """(qb, kb) boolean allowed-mask."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    allowed = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        c = kp <= qp
+        if prefix_len > 0:
+            c = c | (kp < prefix_len)
+        allowed = allowed & c
+    if window > 0:
+        allowed = allowed & (qp - kp < window)
+    return allowed
+
+
+def blockwise_attention(
+    q: jax.Array,  # (b, qs, nh, hd)
+    k: jax.Array,  # (b, ks, nkv, hd)
+    v: jax.Array,  # (b, ks, nkv, hd)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    logit_softcap: float = 0.0,
+    q_offset: int = 0,
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> jax.Array:
+    b, qs, nh, hd = q.shape
+    _, ks, nkv, _ = k.shape
+    rep = nh // nkv
+    q_block = min(q_block, qs)
+    kv_block = min(kv_block, ks)
+    assert qs % q_block == 0 and ks % kv_block == 0, (qs, q_block, ks, kv_block)
+    nq, nk = qs // q_block, ks // kv_block
+
+    # (nq, b, qb, nkv, rep, hd)
+    qr = q.reshape(b, nq, q_block, nkv, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, kv_block, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, kv_block, nkv, hd).transpose(1, 0, 2, 3, 4)
+
+    kv_idx = jnp.arange(nk)
+
+    def q_block_fn(args):
+        qi, q_idx = args  # (b, qb, nkv, rep, hd), scalar
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, inp):
+            kj, vj, k_idx = inp
+
+            def compute(c):
+                acc, m, l = c
+                s = jnp.einsum(
+                    "bqgrd,bkgd->bqgrk", qi, kj,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                if logit_softcap > 0.0:
+                    s = _softcap(s, logit_softcap)
+                q_pos = q_offset + q_idx * q_block + jnp.arange(q_block)
+                k_pos = k_idx * kv_block + jnp.arange(kv_block)
+                allowed = _mask(q_pos, k_pos, causal=causal, window=window,
+                                prefix_len=prefix_len)
+                s = jnp.where(allowed[None, :, None, None, :], s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + jnp.sum(p, axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bqgrk,bkgd->bqgrd", p.astype(vj.dtype), vj,
+                    preferred_element_type=jnp.float32,
+                )
+                return (acc_new, m_new, l_new)
+
+            # §Perf iteration A3: skip fully-masked KV blocks (causal future
+            # blocks; blocks older than the sliding window + prefix) — the
+            # XLA analogue of the Pallas kernel's pl.when guard. lax.cond
+            # executes one branch at runtime → ~2× less attention compute
+            # for causal full-sequence passes.
+            run = jnp.bool_(True)
+            q_lo = q_offset + q_idx * q_block
+            q_hi = q_lo + q_block - 1
+            k_lo = k_idx * kv_block
+            k_hi = k_lo + kv_block - 1
+            if causal:
+                run = jnp.logical_and(run, k_lo <= q_hi)
+            if window > 0:
+                live = k_hi >= q_lo - window + 1
+                if prefix_len > 0:
+                    live = jnp.logical_or(live, k_lo < prefix_len)
+                run = jnp.logical_and(run, live)
+            return jax.lax.cond(run, compute, lambda c: c, carry), None
+
+        acc0 = jnp.zeros((b, q_block, nkv, rep, hd), jnp.float32)
+        m0 = jnp.full((b, q_block, nkv, rep), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_block, nkv, rep), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kr, vr, kv_idx))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    # flash-style backward: recompute each q-block's KV scan instead of
+    # saving per-block softmax residuals (O(S²) otherwise — see §Perf log).
+    q_block_fn = jax.checkpoint(q_block_fn, prevent_cse=False)
+    outs = jax.lax.map(q_block_fn, (qr, jnp.arange(nq)))  # (nq, b, qb, nkv, rep, hd)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, qs, nh, hd)
+
+
+def decode_attention(
+    q: jax.Array,        # (b, 1, nh, hd)
+    k_cache: jax.Array,  # (b, S, nkv, hd)
+    v_cache: jax.Array,  # (b, S, nkv, hd)
+    pos: jax.Array,      # scalar int32 — current position (cache fill level)
+    *,
+    scale: float,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """Single-token attention over a KV cache (no blocking needed: the score
+    tensor is (b, nh, S), linear in context)."""
+    from repro.distrib.act import shard as _shard
+
+    b, _, nh, hd = q.shape
+    _, S, nkv, _ = k_cache.shape
+    rep = nh // nkv
+    qr = q.reshape(b, nkv, rep, hd)
+    # contract over the cache's sharded head_dim: without this constraint
+    # GSPMD re-shards (= fully re-materializes, 1 GiB/layer) the cache to
+    # match whatever sharding the dot would otherwise pick.
+    qr = _shard(qr, "batch", "kv_heads", None, "cache_hd")
+    s = jnp.einsum("bgrd,bkgd->bgrk", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = _shard(s, "batch", "kv_heads", None, None)  # psum over model here
+    if logit_softcap > 0.0:
+        s = _softcap(s, logit_softcap)
+    k_pos = jnp.arange(S)
+    allowed = k_pos <= pos
+    if window > 0:
+        allowed = allowed & (pos - k_pos < window)
+    s = jnp.where(allowed[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, nh, hd).astype(q.dtype)
+
+
+def naive_attention(
+    q, k, v, *, scale, causal=True, window=0, prefix_len=0, logit_softcap=0.0,
+    q_offset: int = 0,
+):
+    """O(s²)-memory oracle used by unit tests against the blockwise path."""
+    b, qs, nh, hd = q.shape
+    _, ks, nkv, _ = k.shape
+    rep = nh // nkv
+    qr = q.reshape(b, qs, nkv, rep, hd)
+    s = jnp.einsum("bqgrd,bkgd->bqgrk", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    if logit_softcap > 0.0:
+        s = _softcap(s, logit_softcap)
+    allowed = _mask(q_offset + jnp.arange(qs), jnp.arange(ks),
+                    causal=causal, window=window, prefix_len=prefix_len)
+    s = jnp.where(allowed[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqgrk,bkgd->bqgrd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, qs, nh, hd).astype(q.dtype)

@@ -1,0 +1,227 @@
+"""Optimizers: AdamW and a factored-second-moment variant (Adafactor-style)
+for the 314B-class configs where full f32 Adam state does not fit.
+
+Pure-pytree implementations (no optax dependency in this container); state
+layouts are chosen so the distribution layer can derive optimizer-state
+PartitionSpecs mechanically from the parameter specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    accum_dtype: str = "float32"   # grad-accumulation dtype (314B: bfloat16)
+    # leaves whose per-device f32 update temporaries exceed this are updated
+    # slice-by-slice (lax.map over the stacked-layer axis) to bound peak HBM
+    update_chunk_bytes: int = 128 * 1024 * 1024
+
+
+def _chunked(cfg, fn, *args):
+    """Apply a per-leaf update slice-wise along axis 0 when the f32
+    temporaries would be large (stacked MoE weights are GBs per leaf)."""
+    p = args[0]
+    if p.ndim >= 3 and p.size * 4 > cfg.update_chunk_bytes and p.shape[0] > 1:
+        return jax.lax.map(lambda xs: fn(*xs), args)
+    return fn(*args)
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(
+    grads: PyTree, max_norm: float, *, prescale: float = 1.0
+) -> Tuple[PyTree, jax.Array]:
+    """Clip to max_norm. ``prescale`` folds a pending constant factor (e.g.
+    1/microbatches from gradient accumulation) into the single multiply so
+    no extra full-size grad copy is materialized."""
+    gnorm = global_norm(grads) * prescale
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9)) * prescale
+    # scale in the grad's own dtype: a f32 round-trip would materialize a
+    # full f32 copy of every leaf (GBs for stacked MoE weights)
+    clipped = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    return clipped, gnorm
+
+
+# ------------------------------------------------------------------- AdamW
+
+def adamw_init(params: PyTree) -> PyTree:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads: PyTree, state: PyTree, params: PyTree):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd_inner(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v)
+
+    def upd(g, m, v, p):
+        return _chunked(cfg, upd_inner, p, g, m, v)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    istup = lambda x: isinstance(x, tuple)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=istup)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=istup)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=istup)
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# --------------------------------------------------------------- Adafactor
+
+def adafactor_init(params: PyTree) -> PyTree:
+    def init(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(init, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptimizerConfig, grads: PyTree, state: PyTree, params: PyTree):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+    is_state_leaf = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+
+    def upd_inner(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + 1e-30
+        if p.ndim >= 2:
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+            denom = jnp.sqrt(r[..., None] * vc[..., None, :]) + cfg.eps
+            delta = g / denom
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": decay * v["v"] + (1 - decay) * g2}
+            delta = g / (jnp.sqrt(nv["v"]) + cfg.eps)
+        rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+        delta = delta / jnp.maximum(1.0, rms)  # Adafactor update clipping
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype), nv)
+
+    def upd(g, p, v):
+        return _chunked(cfg, upd_inner, p, g, v)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, p, v) for g, p, v in zip(flat_g, flat_p, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in out])
+    new_v = jax.tree.unflatten(treedef, [t[1] for t in out])
+    return new_params, {"v": new_v, "step": step}
+
+
+# ------------------------------------------------------------------ facade
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(cfg, g, s, p)
+    if cfg.name == "adafactor":
+        return adafactor_init, lambda g, s, p: adafactor_update(cfg, g, s, p)
+    raise ValueError(cfg.name)
+
+
+def zero2_specs(param_specs: PyTree, params_shapes: PyTree, batch_axes,
+                batch_size: int):
+    """ZeRO-2 optimizer-state specs: take the parameter's (TP-only) spec and
+    shard its first free, divisible dimension over the batch axes — the
+    optimizer state is 2-D sharded even though the weights are TP-only."""
+    from jax.sharding import PartitionSpec as P
+
+    def per(spec, shape):
+        spec = list(spec) + [None] * (len(shape.shape) - len(spec))
+        for i, (ax, dim) in enumerate(zip(spec, shape.shape)):
+            if ax is None and dim % batch_size == 0 and dim > 1:
+                spec[i] = batch_axes
+                break
+        return P(*spec)
+
+    return jax.tree.map(per, param_specs, params_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(opt_name: str, param_specs: PyTree, params_shapes: PyTree,
+                    *, zero2=None):
+    """Derive optimizer-state PartitionSpecs from the parameter specs.
+
+    ``zero2=(batch_axes, batch_size)`` re-shards m/v over the batch axes
+    (the weights stay TP-only; see Rules.weight_fsdp)."""
+    from jax.sharding import PartitionSpec as P
+
+    is_spec = lambda x: isinstance(x, P)
+    if zero2 is not None:
+        param_specs = zero2_specs(param_specs, params_shapes, *zero2)
+    if opt_name == "adamw":
+        return {"m": param_specs, "v": param_specs, "step": P()}
+    if opt_name == "adafactor":
+        def per(spec, shape):
+            if len(shape.shape) >= 2:
+                return {
+                    "vr": P(*tuple(spec)[:-1]),
+                    "vc": P(*(tuple(spec)[:-2] + (tuple(spec)[-1],))),
+                }
+            return {"v": spec}
+
+        return {
+            "v": jax.tree.map(per, param_specs, params_shapes, is_leaf=is_spec),
+            "step": P(),
+        }
+    raise ValueError(opt_name)

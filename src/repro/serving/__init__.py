@@ -1,0 +1,2 @@
+from .worker import FunctionSpec, InstancePool, RequestResult, Worker
+from .trace import build_functions, replay_trace, summarize

@@ -1,0 +1,116 @@
+"""Shared serving-bench harness: build a function suite, replay traces.
+
+The function suite mirrors the paper's Table 1 structure: variants of a
+runtime family with different dependency footprints —
+
+* *adapter* functions touch a few embedding rows + one layer (small diffs,
+  the paper's ``lorem``-class quick functions);
+* *head* functions replace the full unembedding/head (mid diffs);
+* *fine-tune* functions modify every block (large diffs, the
+  ``sentiment-analysis``-class heavy functions).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.snapshot import flatten_pytree
+from repro.models import Model
+from repro.serving.worker import FunctionSpec, RequestResult, Worker
+
+import jax
+
+
+def build_functions(
+    root: str, cfg, model: Model, *, n_functions: int = 4, seed: int = 0,
+) -> Tuple[Worker, List[FunctionSpec]]:
+    worker = Worker(os.path.join(root, "worker"))
+    base_params = model.init(seed)
+    worker.register_runtime(cfg.name, model, base_params)
+    base_flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
+
+    rng = np.random.default_rng(seed + 1)
+    specs: List[FunctionSpec] = []
+    kinds = ["adapter", "head", "finetune"]
+    src_dir = os.path.join(root, "sources")
+    os.makedirs(src_dir, exist_ok=True)
+    for i in range(n_functions):
+        kind = kinds[i % len(kinds)]
+        variant = {k: np.array(v) for k, v in base_flat.items()}
+        touched_rows: Dict[str, List[int]] = {}
+        if kind == "adapter":
+            rows = list(range(8 * i, 8 * i + 16))
+            variant["embed/table"][rows] += rng.standard_normal(
+                (len(rows), variant["embed/table"].shape[1])
+            ).astype(variant["embed/table"].dtype) * 0.02
+            touched_rows["embed/table"] = rows
+            # one block's w_in as the "imported library"
+            key = next(k for k in variant if k.endswith("ffn/w_in"))
+            variant[key] = variant[key] + 0.01
+        elif kind == "head":
+            variant["embed/table"] = variant["embed/table"] * 1.01  # full table
+        else:  # finetune
+            for k in variant:
+                if "/wq" in k or "/w_in" in k or "/w_out" in k:
+                    variant[k] = variant[k] + 0.005
+        src = os.path.join(src_dir, f"fn{i}.npz")
+        np.savez(src, **{k: v for k, v in variant.items()
+                         if not np.array_equal(v, base_flat[k])})
+        spec = FunctionSpec(
+            name=f"fn{i}-{kind}", family=cfg.name, variant=variant,
+            touched=None, touched_rows=touched_rows, source_path=src,
+        )
+        worker.register_function(spec)
+        specs.append(spec)
+    return worker, specs
+
+
+def request_tokens(spec: FunctionSpec, rng: np.random.Generator, vocab: int,
+                   batch: int = 1, seq: int = 32) -> np.ndarray:
+    rows = spec.touched_rows.get("embed/table")
+    if rows:
+        return rng.choice(np.asarray(rows), size=(batch, seq)).astype(np.int32)
+    return rng.integers(0, vocab, size=(batch, seq), dtype=np.int32)
+
+
+def replay_trace(
+    worker: Worker, specs: List[FunctionSpec], *, n_requests: int,
+    cold_fraction: float, strategy: str, seed: int = 0,
+) -> List[RequestResult]:
+    rng = np.random.default_rng(seed)
+    vocab = worker.models[specs[0].family].cfg.vocab_size
+    results = []
+    for i in range(n_requests):
+        spec = specs[i % len(specs)]
+        toks = request_tokens(spec, rng, vocab)
+        force_cold = bool(rng.random() < cold_fraction)
+        results.append(worker.handle(spec.name, toks, strategy=strategy,
+                                     force_cold=force_cold))
+    return results
+
+
+def summarize(strategy: str, results: List[RequestResult]) -> Dict:
+    cold = [r for r in results if r.cold]
+    warm = [r for r in results if not r.cold]
+    ms = lambda xs: round(float(np.mean(xs)) * 1e3, 3) if xs else None
+    out = {
+        "strategy": strategy,
+        "n_cold": len(cold), "n_warm": len(warm),
+        "cold_boot_ms": ms([r.boot_s for r in cold]),
+        "cold_exec_ms": ms([r.exec_s for r in cold]),
+        "cold_e2e_ms": ms([r.latency_s for r in cold]),
+        "warm_e2e_ms": ms([r.latency_s for r in warm]),
+    }
+    mets = [r.metrics for r in cold if r.metrics is not None]
+    if mets:
+        out.update(
+            A_ms=ms([m.t_preconfig for m in mets]),
+            B_ms=ms([m.t_eager for m in mets]),
+            C_ms=ms([m.t_init for m in mets]),
+            D_ms=ms([m.d_overhead for m in mets]),
+            eager_mb=round(float(np.mean([m.eager_bytes for m in mets])) / 2**20, 2),
+        )
+    return out

@@ -1,0 +1,246 @@
+"""Serving worker: the FaaS controller of the paper's Fig. 4, for models.
+
+A *function* is a registered model variant (fine-tune / new head / adapter
+merge) of a runtime *family* (architecture).  A request either hits a warm
+instance (instance pool) or triggers a cold start through the snapshot
+engine with the configured strategy (regular / reap / seuss / snapfaas− /
+snapfaas).  Execution runs the family's jitted step(s) on the restored
+params — demand-paged leaves materialize the moment the request path first
+touches them, exactly like REAP's runtime page faults.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AccessLog, ColdStartMetrics, RestoredInstance, ZygoteRegistry
+from repro.core.snapshot import flatten_pytree, resolve
+from repro.models import Batch, Model
+
+PyTree = Any
+
+
+@dataclass
+class FunctionSpec:
+    """What the developer 'uploads' (paper Fig. 3): variant params + which
+    leaves its requests touch (handler signature)."""
+
+    name: str
+    family: str
+    variant: Dict[str, np.ndarray]          # flat path → array
+    touched: Optional[List[str]] = None     # leaves a request reads (None=all)
+    touched_rows: Dict[str, List[int]] = field(default_factory=dict)
+    source_path: str = ""
+
+
+@dataclass
+class RequestResult:
+    function: str
+    cold: bool
+    strategy: str
+    latency_s: float
+    boot_s: float
+    exec_s: float
+    metrics: Optional[ColdStartMetrics]
+    output: Any = None
+
+
+class InstancePool:
+    """Warm instances with LRU eviction under a memory budget (the paper's
+    keep-warm grace behaviour; Fig. 7's memory/throughput trade)."""
+
+    def __init__(self, budget_bytes: int):
+        self.budget = budget_bytes
+        self._pool: "OrderedDict[str, Tuple[RestoredInstance, int]]" = OrderedDict()
+        self.used = 0
+
+    def get(self, fn: str) -> Optional[RestoredInstance]:
+        item = self._pool.pop(fn, None)
+        if item is None:
+            return None
+        self._pool[fn] = item  # refresh LRU
+        return item[0]
+
+    def put(self, fn: str, inst: RestoredInstance, nbytes: int) -> None:
+        while self.used + nbytes > self.budget and self._pool:
+            _, (_, nb) = self._pool.popitem(last=False)
+            self.used -= nb
+        if self.used + nbytes <= self.budget:
+            self._pool[fn] = (inst, nbytes)
+            self.used += nbytes
+
+    def drop(self, fn: str) -> None:
+        item = self._pool.pop(fn, None)
+        if item is not None:
+            self.used -= item[1]
+
+
+class Worker:
+    """One worker machine: zygote registry + instance pool + jitted families."""
+
+    def __init__(self, root: str, *, pool_budget_bytes: int = 1 << 30,
+                 chunk_bytes: int = 64 * 1024):
+        self.registry = ZygoteRegistry(root, chunk_bytes=chunk_bytes)
+        self.pool = InstancePool(pool_budget_bytes)
+        self.models: Dict[str, Model] = {}
+        self.specs: Dict[str, FunctionSpec] = {}
+        self._fwd: Dict[str, Callable] = {}
+
+    # -- bootstrap (cluster-manager replication step) -------------------------
+
+    def register_runtime(self, family: str, model: Model, base_params: PyTree) -> None:
+        self.models[family] = model
+        flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
+        self.registry.register_runtime(family, flat)
+        fwd = jax.jit(lambda p, tokens: model.logits(p, Batch(tokens=tokens)))
+        self._fwd[family] = fwd
+        # device-ready view of the base pool: shared (CoW-clean) leaves are
+        # served zero-copy to every instance of the family — the runtime
+        # analogue of the paper's mmap'd in-RAM base snapshot.
+        pool = self.registry.pools[family]
+        self._pool_dev = getattr(self, "_pool_dev", {})
+        self._pool_dev[family] = {
+            p: jnp.asarray(pool.get(p)) for p in self.registry.bases[family].arrays
+        }
+        # on-disk base image: what `regular` boots from (kernel+rootfs analog)
+        self._base_npz = getattr(self, "_base_npz", {})
+        base_path = os.path.join(self.registry.root, f"base-{family}.npz")
+        np.savez(base_path, **{k.replace("/", "|"): v for k, v in flat.items()})
+        self._base_npz[family] = base_path
+
+    # -- function registration --------------------------------------------------
+
+    def register_function(self, spec: FunctionSpec) -> None:
+        self.specs[spec.name] = spec
+        self.registry.register_function(
+            spec.name, spec.family, spec.variant, source_path=spec.source_path
+        )
+        # mock invocation under access tracking → WS files (paper Fig. 4)
+        log = AccessLog()
+        for path in (spec.touched if spec.touched is not None else spec.variant):
+            log.touch(path)
+        for path, rows in spec.touched_rows.items():
+            log.touch_rows(path, rows)
+        self.registry.generate_working_set(spec.name, log)
+
+    # -- request path --------------------------------------------------------------
+
+    def _params_for(
+        self, spec: FunctionSpec, inst: RestoredInstance,
+        request_rows: Optional[Dict[str, np.ndarray]] = None,
+    ) -> PyTree:
+        """Materialize exactly what this request touches.
+
+        Gather-type leaves (embedding tables, expert banks — declared via
+        ``touched_rows``) use row-granular demand materialization: only the
+        chunks covering the request's rows fault in; everything else of the
+        leaf keeps base content and is never read. Other touched leaves
+        materialize fully. This is the exec-time half of the WS win."""
+        template = self.models[spec.family].param_shapes()
+        rows = dict(spec.touched_rows)
+        for k, v in (request_rows or {}).items():
+            rows[k] = np.union1d(np.asarray(rows.get(k, []), np.int64), v)
+
+        pool_dev = getattr(self, "_pool_dev", {}).get(spec.family, {})
+
+        def rec(t, prefix):
+            if isinstance(t, dict):
+                return {k: rec(v, f"{prefix}{k}/") for k, v in t.items()}
+            path = prefix[:-1]
+            ma = inst.arrays[path]
+            if ma.state == "shared" and not ma.written and path in pool_dev:
+                return pool_dev[path]  # zero-copy CoW share
+            if path in rows:
+                arr = ma.ensure_rows(rows[path], inst.metrics)
+            else:
+                arr = inst.value(path)
+            return jnp.asarray(arr)
+
+        return rec(template, "")
+
+    def handle(
+        self,
+        fn: str,
+        tokens: np.ndarray,
+        *,
+        strategy: str = "snapfaas",
+        force_cold: bool = False,
+    ) -> RequestResult:
+        spec = self.specs[fn]
+        t0 = time.perf_counter()
+        inst = None if force_cold else self.pool.get(fn)
+        cold = inst is None
+        if cold:
+            self.pool.drop(fn)
+            loaders = self._loaders(spec)
+            inst = self.registry.cold_start(
+                fn, strategy,
+                residual_init=lambda ds: {**ds, "kv_ready": True},
+                **loaders,
+            )
+        boot = time.perf_counter() - t0
+
+        te = time.perf_counter()
+        req_rows = {}
+        if "embed/table" in spec.touched_rows or "embed/table" in spec.variant:
+            req_rows["embed/table"] = np.unique(np.asarray(tokens))
+        params = self._params_for(spec, inst, req_rows)
+        logits = self._fwd[spec.family](params, jnp.asarray(tokens))
+        logits.block_until_ready()
+        exec_s = time.perf_counter() - te
+        if inst.metrics is not None:
+            inst.metrics.t_exec = exec_s
+
+        nbytes = sum(a.meta.nbytes for a in inst.arrays.values())
+        self.pool.put(fn, inst, nbytes)
+        return RequestResult(
+            function=fn, cold=cold, strategy=strategy if cold else "warm",
+            latency_s=time.perf_counter() - t0, boot_s=boot if cold else 0.0,
+            exec_s=exec_s, metrics=inst.metrics if cold else None,
+            output=np.asarray(logits[:, -1, :8]),
+        )
+
+    def _loaders(self, spec: FunctionSpec):
+        """source/base loaders for seuss/regular strategies.
+
+        Both deliberately go through the on-disk source artifacts (npz parse
+        + copy): `regular` = boot the whole runtime from storage, `seuss` =
+        import the function from its source — the costs those designs cannot
+        memoize (paper §2.2)."""
+        rec = self.registry.functions[spec.name]
+        base = self.registry.bases[spec.family]
+
+        def source_loader():
+            if spec.source_path:
+                with np.load(spec.source_path) as z:
+                    return {k: z[k] for k in z.files}
+            return {k: np.array(v) for k, v in spec.variant.items()}
+
+        def base_loader():
+            path = self._base_npz.get(spec.family)
+            if path and os.path.exists(path):
+                with np.load(path) as z:
+                    return {k.replace("|", "/"): z[k] for k in z.files}
+            pool = self.registry.pools[spec.family]
+            return {p: np.array(pool.get(p)) for p in base.arrays}
+
+        return {"source_loader": source_loader, "base_loader": base_loader}
+
+    def source_files(self, fn: str) -> list:
+        """On-disk source artifacts of a function (for cache dropping)."""
+        out = []
+        spec = self.specs[fn]
+        if spec.source_path:
+            out.append(spec.source_path)
+        p = self._base_npz.get(spec.family)
+        if p:
+            out.append(p)
+        return out

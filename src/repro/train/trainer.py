@@ -1,0 +1,256 @@
+"""Training runtime: loop + layered-snapshot checkpointing + fault tolerance.
+
+Checkpoint/restart *is* the paper's machinery reused (DESIGN.md §2): a resume
+after preemption is a cold start whose base snapshot is the in-RAM pool and
+whose diff is whatever changed since — content-addressed chunks make adjacent
+checkpoints dedup to a fraction of the naive cost.
+
+Fault tolerance features:
+* **async checkpointing** — device→host get happens on the step boundary
+  (blocking only for the transfer), chunking/hashing/writing runs on a
+  background thread; the step loop continues immediately;
+* **restart recovery** — ``resume()`` restores params/opt/step/data-cursors
+  from the newest durable snapshot;
+* **elastic restore** — manifests are topology-independent; restoring onto a
+  different mesh re-shards on device_put (the paper-§9 ballooning analogue);
+* **straggler mitigation** — a step-time watchdog reassigns data shards from
+  slow loaders (work stealing; shards are pure functions of (shard, step)).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import ChunkStore, take_snapshot
+from repro.core.restore import BasePool
+from repro.core.snapshot import SnapshotManifest, flatten_pytree, resolve
+from repro.data.pipeline import ShardedLoader
+from repro.distrib.sharding import fingerprint
+from repro.launch.steps import make_train_step, make_train_state
+from repro.models import Model
+from repro.optim import OptimizerConfig
+
+PyTree = Any
+
+
+def _to_host(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = flatten_pytree(jax.tree.map(np.asarray, tree))
+    return flat
+
+
+@dataclass
+class TrainerConfig:
+    workdir: str
+    checkpoint_every: int = 50
+    keep: int = 3
+    watchdog_factor: float = 3.0   # shard slower than factor×median → steal
+    async_checkpoint: bool = True
+
+
+class CheckpointWriter:
+    """Background thread: host pytree → chunked snapshot on disk."""
+
+    def __init__(self, store: ChunkStore, root: str):
+        self.store = store
+        self.root = root
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        self.written: List[str] = []
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            flat, step, extra = item
+            m = take_snapshot(
+                self.store, f"ckpt-{step:08d}", flat,
+                kind="full", runtime="train", device_state=extra,
+            )
+            m.save(self.root)
+            self.written.append(m.snapshot_id)
+            with open(os.path.join(self.root, "LATEST"), "w") as f:
+                f.write(m.snapshot_id)
+
+    def submit(self, flat: Dict[str, np.ndarray], step: int, extra: Dict) -> None:
+        self._q.put((flat, step, extra))
+
+    def drain(self) -> None:
+        self._q.join() if False else None
+        while not self._q.empty():
+            time.sleep(0.05)
+        time.sleep(0.05)
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._thread.join(timeout=10)
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        opt_cfg: OptimizerConfig,
+        loader: ShardedLoader,
+        tcfg: TrainerConfig,
+        *,
+        peer_loaders: Optional[List[ShardedLoader]] = None,
+        microbatches: int = 1,
+    ):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.loader = loader
+        self.tcfg = tcfg
+        self.peers = peer_loaders or []
+        os.makedirs(tcfg.workdir, exist_ok=True)
+        self.store = ChunkStore(os.path.join(tcfg.workdir, "store"))
+        self.writer = CheckpointWriter(self.store, tcfg.workdir)
+        self.step = 0
+        self.state: Optional[PyTree] = None
+        self._train_step = jax.jit(
+            make_train_step(model, opt_cfg, microbatches=microbatches)
+        )
+        self.metrics_log: List[Dict[str, float]] = []
+        self.steals: List[Dict[str, int]] = []
+
+    # -- init / resume -------------------------------------------------------
+
+    def init_state(self, seed: int = 0) -> None:
+        self.state = make_train_state(self.model, self.opt_cfg, seed)
+
+    def latest_snapshot(self) -> Optional[str]:
+        p = os.path.join(self.tcfg.workdir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return f.read().strip()
+
+    def resume(self) -> bool:
+        """Restore from the newest checkpoint. Returns True if resumed.
+
+        Restoring is a cold start: eager batched chunk read (the diff path —
+        everything since manifests dedup against earlier packs), then
+        device_put against the *current* topology (elastic)."""
+        snap_id = self.latest_snapshot()
+        if snap_id is None:
+            return False
+        m = SnapshotManifest.load(self.tcfg.workdir, snap_id)
+        pool = BasePool.load(self.store, m)  # batched eager read
+        template = jax.eval_shape(
+            lambda: make_train_state(self.model, self.opt_cfg, 0)
+        )
+        host_flat = {path: pool.get(path) for path in m.arrays}
+        self.state = _unflatten_like(template, host_flat)
+        self.step = int(m.device_state.get("step", 0))
+        if "loader" in m.device_state:
+            self.loader.load_state_dict(m.device_state["loader"])
+        return True
+
+    # -- checkpoint -------------------------------------------------------------
+
+    def checkpoint(self) -> None:
+        assert self.state is not None
+        flat = _to_host(self.state)
+        extra = {
+            "step": self.step,
+            "loader": self.loader.state_dict(),
+            "mesh_fingerprint": "",
+        }
+        if self.tcfg.async_checkpoint:
+            self.writer.submit(flat, self.step, extra)
+        else:
+            m = take_snapshot(self.store, f"ckpt-{self.step:08d}", flat,
+                              kind="full", runtime="train", device_state=extra)
+            m.save(self.tcfg.workdir)
+            with open(os.path.join(self.tcfg.workdir, "LATEST"), "w") as f:
+                f.write(m.snapshot_id)
+
+    # -- watchdog ------------------------------------------------------------------
+
+    def _watchdog(self) -> None:
+        """Steal shards from peers whose recent fetch time is pathological."""
+        if not self.peers:
+            return
+        mine = np.median(self.loader.fetch_times[-5:]) if self.loader.fetch_times else 0
+        for peer in self.peers:
+            if not peer.fetch_times or not peer.owned:
+                continue
+            theirs = np.median(peer.fetch_times[-5:])
+            if mine > 0 and theirs > self.tcfg.watchdog_factor * mine:
+                shard = peer.owned[-1]
+                at = peer.release(shard)
+                self.loader.steal(shard, at)
+                self.steals.append({"shard": shard, "at_step": at})
+
+    # -- loop -----------------------------------------------------------------------
+
+    def train(self, num_steps: int, *, fail_at: Optional[int] = None) -> Dict:
+        """Run `num_steps`. ``fail_at`` simulates a crash (raises) mid-run —
+        tests use it to exercise resume()."""
+        assert self.state is not None, "call init_state() or resume() first"
+        t_start = time.perf_counter()
+        for _ in range(num_steps):
+            if fail_at is not None and self.step == fail_at:
+                raise RuntimeError(f"simulated failure at step {self.step}")
+            batch = self.loader.next()
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            self.state, metrics = self._train_step(self.state, batch)
+            loss = float(metrics["loss"])
+            self.metrics_log.append(
+                {"step": self.step, "loss": loss,
+                 "grad_norm": float(metrics["grad_norm"]),
+                 "step_time": time.perf_counter() - t0}
+            )
+            self.step += 1
+            if self.step % self.tcfg.checkpoint_every == 0:
+                self.checkpoint()
+            self._watchdog()
+        return {
+            "steps": num_steps,
+            "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "wall": time.perf_counter() - t_start,
+        }
+
+    def close(self) -> None:
+        self.writer.close()
+
+
+# -- pytree helpers -------------------------------------------------------------
+
+def flatten_pytree_shapes(tree: PyTree) -> Dict[str, Any]:
+    out = {}
+
+    def rec(t, prefix):
+        if isinstance(t, dict):
+            for k in sorted(t):
+                rec(t[k], f"{prefix}{k}/")
+        elif t is None:
+            pass
+        else:
+            out[prefix[:-1]] = t
+
+    rec(tree, "")
+    return out
+
+
+def _unflatten_like(template: PyTree, flat: Dict[str, np.ndarray]) -> PyTree:
+    def rec(t, prefix):
+        if isinstance(t, dict):
+            return {k: rec(v, f"{prefix}{k}/") for k, v in t.items()}
+        if t is None:
+            return None
+        arr = flat[prefix[:-1]]
+        return jax.numpy.asarray(arr.reshape(t.shape).astype(t.dtype))
+
+    return rec(template, "")

@@ -1,0 +1,230 @@
+"""Model-zoo correctness: attention/SSD/MoE oracles + arch smoke tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import Batch, build_model
+from repro.models.attention import blockwise_attention, decode_attention, naive_attention
+from repro.models.moe import moe_ffn
+from repro.models.ssm import causal_conv, conv_step, ssd_chunked, ssd_decode_step
+
+
+# ------------------------------------------------------------------ attention
+
+class TestAttention:
+    @pytest.mark.parametrize("causal,window,prefix", [
+        (True, 0, 0), (True, 16, 0), (False, 0, 0), (True, 0, 8),
+    ])
+    @pytest.mark.parametrize("nkv", [1, 2, 4])
+    def test_blockwise_matches_naive(self, causal, window, prefix, nkv):
+        rng = np.random.default_rng(0)
+        b, s, nh, hd = 2, 64, 4, 16
+        q = jnp.asarray(rng.standard_normal((b, s, nh, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, nkv, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, nkv, hd)), jnp.float32)
+        kw = dict(scale=hd ** -0.5, causal=causal, window=window, prefix_len=prefix)
+        out_b = blockwise_attention(q, k, v, q_block=16, kv_block=16, **kw)
+        out_n = naive_attention(q, k, v, **kw)
+        np.testing.assert_allclose(out_b, out_n, rtol=2e-5, atol=2e-5)
+
+    def test_softcap_matches(self):
+        rng = np.random.default_rng(1)
+        b, s, nh, hd = 1, 32, 2, 8
+        q = jnp.asarray(rng.standard_normal((b, s, nh, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, nh, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, nh, hd)), jnp.float32)
+        kw = dict(scale=hd ** -0.5, causal=True, logit_softcap=5.0)
+        out_b = blockwise_attention(q, k, v, q_block=8, kv_block=8, **kw)
+        out_n = naive_attention(q, k, v, **kw)
+        np.testing.assert_allclose(out_b, out_n, rtol=2e-5, atol=2e-5)
+
+    def test_decode_matches_last_row(self):
+        rng = np.random.default_rng(2)
+        b, s, nh, nkv, hd = 2, 32, 4, 2, 16
+        q = jnp.asarray(rng.standard_normal((b, s, nh, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, nkv, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, nkv, hd)), jnp.float32)
+        full = naive_attention(q, k, v, scale=hd ** -0.5, causal=True)
+        # decode the last position against a cache padded to 48
+        S = 48
+        kc = jnp.pad(k, ((0, 0), (0, S - s), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, S - s), (0, 0), (0, 0)))
+        out = decode_attention(q[:, -1:], kc, vc, jnp.asarray(s - 1),
+                               scale=hd ** -0.5)
+        np.testing.assert_allclose(out[:, 0], full[:, -1], rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------------- SSD
+
+def ssd_sequential_oracle(x, dt, A, B, C, D):
+    """Token-by-token state recurrence (the definition)."""
+    b, l, nh, hd = x.shape
+    ds = B.shape[-1]
+    state = np.zeros((b, nh, hd, ds), np.float64)
+    ys = np.zeros((b, l, nh, hd), np.float64)
+    x64, dt64, B64, C64 = map(lambda a: np.asarray(a, np.float64), (x, dt, B, C))
+    A64, D64 = np.asarray(A, np.float64), np.asarray(D, np.float64)
+    for t in range(l):
+        da = np.exp(dt64[:, t] * A64)  # (b, nh)
+        upd = np.einsum("bnp,bs,bn->bnps", x64[:, t], B64[:, t], dt64[:, t])
+        state = state * da[:, :, None, None] + upd
+        ys[:, t] = np.einsum("bnps,bs->bnp", state, C64[:, t]) + D64[None, :, None] * x64[:, t]
+    return ys, state
+
+
+class TestSSD:
+    @pytest.mark.parametrize("l,chunk", [(32, 8), (64, 16), (64, 64), (48, 16)])
+    def test_chunked_matches_sequential(self, l, chunk):
+        rng = np.random.default_rng(3)
+        b, nh, hd, ds = 2, 4, 8, 16
+        x = jnp.asarray(rng.standard_normal((b, l, nh, hd)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.5, (b, l, nh)), jnp.float32)
+        A = -jnp.asarray(rng.uniform(0.5, 2.0, (nh,)), jnp.float32)
+        B = jnp.asarray(rng.standard_normal((b, l, ds)), jnp.float32)
+        C = jnp.asarray(rng.standard_normal((b, l, ds)), jnp.float32)
+        D = jnp.asarray(rng.standard_normal((nh,)), jnp.float32)
+        y, st = ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+        y_ref, st_ref = ssd_sequential_oracle(x, dt, A, B, C, D)
+        np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(st, st_ref, rtol=1e-4, atol=1e-4)
+
+    def test_decode_continues_prefill(self):
+        rng = np.random.default_rng(4)
+        b, l, nh, hd, ds = 2, 32, 4, 8, 16
+        p = 24  # prefill length (divisible by chunk)
+        mk = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+        x, B, C = mk(b, l, nh, hd), mk(b, l, ds), mk(b, l, ds)
+        dt = jnp.asarray(rng.uniform(0.01, 0.5, (b, l, nh)), jnp.float32)
+        A = -jnp.asarray(rng.uniform(0.5, 2.0, (nh,)), jnp.float32)
+        D = mk(nh)
+        y_full, _ = ssd_chunked(x, dt, A, B, C, D, chunk=8)
+        _, st = ssd_chunked(x[:, :p], dt[:, :p], A, B[:, :p], C[:, :p], D, chunk=8)
+        y_t, _ = ssd_decode_step(st, x[:, p], dt[:, p], A, B[:, p], C[:, p], D)
+        np.testing.assert_allclose(y_t, y_full[:, p], rtol=1e-4, atol=1e-4)
+
+    def test_conv_step_matches(self):
+        rng = np.random.default_rng(5)
+        b, l, ch, w = 2, 16, 6, 4
+        x = jnp.asarray(rng.standard_normal((b, l, ch)), jnp.float32)
+        wt = jnp.asarray(rng.standard_normal((w, ch)), jnp.float32)
+        bias = jnp.asarray(rng.standard_normal((ch,)), jnp.float32)
+        y = causal_conv(x, wt, bias)
+        y_t, _ = conv_step(x[:, l - w : l - 1, :], x[:, l - 1], wt, bias)
+        np.testing.assert_allclose(y_t, y[:, -1], rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------- MoE
+
+class TestMoE:
+    def test_ample_capacity_matches_dense(self):
+        """With capacity ≥ tokens, index dispatch must equal the dense
+        (every-expert) computation weighted by the router."""
+        from repro.models.config import ModelConfig
+        cfg = ModelConfig(
+            name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+            num_kv_heads=2, d_ff=32, vocab_size=64, num_experts=4,
+            num_experts_per_tok=2, moe_d_ff=32, capacity_factor=64.0,
+        )
+        rng = np.random.default_rng(6)
+        t, D, E, F = 8, 16, 4, 32
+        params = {
+            "router": jnp.asarray(rng.standard_normal((D, E)), jnp.float32),
+            "w_in": jnp.asarray(rng.standard_normal((E, D, F)) * 0.1, jnp.float32),
+            "w_gate": jnp.asarray(rng.standard_normal((E, D, F)) * 0.1, jnp.float32),
+            "w_out": jnp.asarray(rng.standard_normal((E, F, D)) * 0.1, jnp.float32),
+        }
+        x = jnp.asarray(rng.standard_normal((1, t, D)), jnp.float32)
+        y, aux = moe_ffn(params, x, cfg)
+        # dense oracle
+        logits = np.asarray(x[0] @ params["router"])
+        probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+        top = np.argsort(-probs, axis=-1)[:, :2]
+        y_ref = np.zeros((t, D), np.float32)
+        for i in range(t):
+            g = probs[i, top[i]]
+            g = g / g.sum()
+            for j, e in enumerate(top[i]):
+                h = np.asarray(x[0, i] @ params["w_in"][e])
+                gt = np.asarray(x[0, i] @ params["w_gate"][e])
+                silu = gt / (1 + np.exp(-gt))
+                y_ref[i] += g[j] * (silu * h) @ np.asarray(params["w_out"][e])
+        np.testing.assert_allclose(y[0], y_ref, rtol=1e-4, atol=1e-4)
+        assert np.isfinite(float(aux))
+
+    def test_capacity_drops_tokens(self):
+        from repro.models.config import ModelConfig
+        cfg = ModelConfig(
+            name="t", family="moe", num_layers=1, d_model=8, num_heads=2,
+            num_kv_heads=2, d_ff=16, vocab_size=64, num_experts=2,
+            num_experts_per_tok=1, moe_d_ff=16, capacity_factor=0.25,
+        )
+        rng = np.random.default_rng(7)
+        params = {
+            "router": jnp.asarray(rng.standard_normal((8, 2)), jnp.float32),
+            "w_in": jnp.asarray(rng.standard_normal((2, 8, 16)), jnp.float32),
+            "w_gate": jnp.asarray(rng.standard_normal((2, 8, 16)), jnp.float32),
+            "w_out": jnp.asarray(rng.standard_normal((2, 16, 8)), jnp.float32),
+        }
+        x = jnp.asarray(rng.standard_normal((1, 16, 8)), jnp.float32)
+        y, _ = moe_ffn(params, x, cfg)
+        # some token outputs must be exactly zero (dropped)
+        zero_rows = np.sum(np.all(np.asarray(y[0]) == 0.0, axis=-1))
+        assert zero_rows > 0
+
+
+# ------------------------------------------------------------- arch smoke
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def _batch(self, cfg, b=2, s=32):
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        pe = None
+        if cfg.is_encoder_decoder or cfg.num_prefix_tokens:
+            p = cfg.num_prefix_tokens or 16
+            pe = jnp.asarray(rng.standard_normal((b, p, cfg.d_model)) * 0.02,
+                             jnp.float32)
+        return Batch(tokens=tokens, labels=tokens, prefix_embeds=pe)
+
+    def test_forward_and_grad_step(self, arch):
+        cfg = reduced(get_config(arch))
+        m = build_model(cfg)
+        params = m.init(0)
+        batch = self._batch(cfg)
+        loss, grads = jax.value_and_grad(lambda p: m.loss(p, batch))(params)
+        assert np.isfinite(float(loss))
+        gnorm = jax.tree.reduce(
+            lambda a, g: a + float(jnp.sum(jnp.square(g))), grads, 0.0
+        )
+        assert np.isfinite(gnorm) and gnorm > 0
+        # logits shape
+        logits = m.logits(params, batch)
+        assert logits.shape == (2, 32, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_prefill_decode_matches_forward(self, arch):
+        cfg = reduced(get_config(arch))
+        m = build_model(cfg)
+        params = m.init(0)
+        b, s = 2, 32
+        batch = self._batch(cfg, b, s)
+        cache_len = 48
+        # teacher-forced logits for the full sequence
+        full = m.logits(params, batch)
+        logits_p, cache = m.prefill(params, Batch(tokens=batch.tokens[:, : s - 1],
+                                                  prefix_embeds=batch.prefix_embeds),
+                                    cache_len=cache_len)
+        np.testing.assert_allclose(
+            np.asarray(logits_p[:, 0]), np.asarray(full[:, s - 2]),
+            rtol=2e-3, atol=2e-3,
+        )
+        # one decode step must match the teacher-forced next-position logits
+        prefix = cfg.num_prefix_tokens if (cfg.num_prefix_tokens and not cfg.is_encoder_decoder) else 0
+        pos = jnp.asarray(s - 1 + prefix, jnp.int32)
+        logits_d, _ = m.decode_step(params, cache, batch.tokens[:, s - 1], pos)
+        np.testing.assert_allclose(
+            np.asarray(logits_d), np.asarray(full[:, s - 1]), rtol=2e-3, atol=2e-3,
+        )
