@@ -12,10 +12,11 @@ import numpy as np
 
 from repro.core import PAPER_C220G5, calibrate_container, predict
 
-from .common import STRATEGIES, build_suite, csv_row, rounds
+from .common import STRATEGIES, build_suite, csv_row, rounds, update_bench_json
 
 
-def run(n_functions: int = 6, n_rounds: int = 3, root: str | None = None) -> List[str]:
+def run(n_functions: int = 6, n_rounds: int = 3, root: str | None = None,
+        json_path: str | None = None) -> List[str]:
     root = root or tempfile.mkdtemp(prefix="bench_break_")
     worker, specs = build_suite(root, n_functions=n_functions)
     hw_here = calibrate_container(root)
@@ -23,6 +24,13 @@ def run(n_functions: int = 6, n_rounds: int = 3, root: str | None = None) -> Lis
         "table2_calibration", 0.0,
         f"bw_store_MBps={hw_here.bw_store/1e6:.0f};lat_store_us={hw_here.lat_store*1e6:.0f}",
     )]
+    payload = {
+        "config": {"n_functions": n_functions, "n_rounds": n_rounds},
+        "calibration": {"bw_store_Bps": hw_here.bw_store,
+                        "lat_store_s": hw_here.lat_store,
+                        "bw_mem_Bps": hw_here.bw_mem},
+        "per_function": {},
+    }
 
     for spec in specs:
         sizes = worker.registry.sizes(spec.name, residual_init_s=1e-4)
@@ -45,6 +53,13 @@ def run(n_functions: int = 6, n_rounds: int = 3, root: str | None = None) -> Lis
                 f"model_ms={pred.total*1e3:.2f};model_err={err:.2f};"
                 f"paper_c220g5_ms={pred_paper.total*1e3:.2f}",
             ))
+            payload["per_function"].setdefault(spec.name, {})[strategy] = {
+                "A_ms": A, "B_ms": B, "C_ms": C, "D_ms": D,
+                "measured_ms": meas_total,
+                "model_ms": pred.total * 1e3,
+                "model_err": err,
+                "paper_c220g5_ms": pred_paper.total * 1e3,
+            }
 
         # paper-hardware projection of the headline ratios
         p = {s: predict(s, sizes, PAPER_C220G5).total for s in STRATEGIES}
@@ -54,9 +69,22 @@ def run(n_functions: int = 6, n_rounds: int = 3, root: str | None = None) -> Lis
             f"vs_seuss={p['seuss']/p['snapfaas']:.1f}x;"
             f"vs_regular={p['regular']/p['snapfaas']:.1f}x",
         ))
+    if json_path:
+        update_bench_json(json_path, "breakdown", payload)
     return lines
 
 
 if __name__ == "__main__":
-    for l in run():
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="A/B/C/D breakdown bench (Table 2) + BENCH_coldstart.json"
+    )
+    ap.add_argument("--functions", type=int, default=6)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--json", default=None,
+                    help="merge a 'breakdown' section into this JSON file")
+    args = ap.parse_args()
+    for l in run(n_functions=args.functions, n_rounds=args.rounds,
+                 json_path=args.json):
         print(l)

@@ -1,19 +1,58 @@
 """Fig. 5 (a–d): cold-start boot / execution / end-to-end latency per
-strategy, plus speed-up over `regular` and the optimal (warm) bound."""
+strategy, plus speed-up over `regular` and the optimal (warm) bound.
+
+Also emits machine-readable results (``--json BENCH_coldstart.json``):
+per-strategy A/B/D timings, restored bytes and eager-restore throughput
+(restored bytes / t_eager), and a planned-vs-legacy restore-engine
+comparison for the snapshot strategies — the perf trajectory future PRs
+regress against.
+"""
 
 from __future__ import annotations
 
-import os
 import tempfile
 from collections import defaultdict
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from .common import STRATEGIES, build_suite, cold_request, csv_row, rounds
+from .common import (
+    STRATEGIES,
+    build_suite,
+    cold_request,
+    csv_row,
+    rounds,
+    update_bench_json,
+)
+
+from repro.core import PLANNED_STRATEGIES
 
 
-def run(n_functions: int = 6, n_rounds: int = 5, root: str | None = None) -> List[str]:
+def _round_stats(rs) -> Dict[str, float]:
+    med = lambda xs: float(np.median(xs))
+    eager_bytes = int(np.median([r.metrics.eager_bytes for r in rs]))
+    t_eager = med([r.metrics.t_eager for r in rs])
+    return {
+        "boot_s": med([r.boot_s for r in rs]),
+        "exec_s": med([r.exec_s for r in rs]),
+        "e2e_s": med([r.latency_s for r in rs]),
+        "t_preconfig_s": med([r.metrics.t_preconfig for r in rs]),
+        "t_eager_s": t_eager,
+        "t_demand_s": med([r.metrics.t_demand for r in rs]),
+        "t_cow_s": med([r.metrics.t_cow for r in rs]),
+        "eager_bytes": eager_bytes,
+        "demand_bytes": int(np.median([r.metrics.demand_bytes for r in rs])),
+        "restored_GBps": (eager_bytes / t_eager / 1e9) if t_eager > 0 else 0.0,
+    }
+
+
+def run(
+    n_functions: int = 6,
+    n_rounds: int = 5,
+    root: Optional[str] = None,
+    json_path: Optional[str] = None,
+) -> List[str]:
+    n_rounds = max(1, n_rounds)
     root = root or tempfile.mkdtemp(prefix="bench_cold_")
     worker, specs = build_suite(root, n_functions=n_functions)
     lines: List[str] = []
@@ -21,47 +60,104 @@ def run(n_functions: int = 6, n_rounds: int = 5, root: str | None = None) -> Lis
 
     # optimal = warm execution only (paper Fig. 5d "optimal")
     for spec in specs:
-        r_warm = None
         _ = cold_request(worker, spec, "snapfaas", drop_cache=False)
         from repro.serving.trace import request_tokens
         from .common import BENCH_CFG
         toks = request_tokens(spec, np.random.default_rng(0), BENCH_CFG.vocab_size,
                               seq=getattr(spec, "exec_seq", 32))
         r_warm = worker.handle(spec.name, toks, strategy="snapfaas")
-        table[spec.name]["optimal"] = {"e2e": r_warm.exec_s}
+        table[spec.name]["optimal"] = {"e2e_s": r_warm.exec_s}
 
     for strategy in STRATEGIES:
         for spec in specs:
-            rs = rounds(worker, spec, strategy, n=n_rounds)
-            boot = float(np.median([r.boot_s for r in rs]))
-            ex = float(np.median([r.exec_s for r in rs]))
-            e2e = float(np.median([r.latency_s for r in rs]))
-            table[spec.name][strategy] = {"boot": boot, "exec": ex, "e2e": e2e}
+            # snapshot strategies are pinned to the planned engine here so
+            # the engine comparison below can reuse these measurements
+            engine = "planned" if strategy in PLANNED_STRATEGIES else None
+            table[spec.name][strategy] = _round_stats(
+                rounds(worker, spec, strategy, n=n_rounds, engine=engine)
+            )
+
+    # planned-vs-legacy eager-restore engine comparison (acceptance metric:
+    # restored bytes / t_eager must improve ≥2x for snapfaas and reap).
+    # Planned numbers come from the main table; only legacy is re-measured.
+    def _sum_stats(stats_per_spec) -> Dict[str, float]:
+        te = sum(s["t_eager_s"] for s in stats_per_spec)
+        tb = sum(s["boot_s"] for s in stats_per_spec)
+        nb = sum(s["eager_bytes"] for s in stats_per_spec)
+        return {
+            "t_eager_s": te,
+            "boot_s": tb,
+            "eager_bytes": nb,
+            "restored_GBps": (nb / te / 1e9) if te > 0 else 0.0,
+        }
+
+    engines: Dict[str, Dict[str, object]] = {}
+    for strategy in PLANNED_STRATEGIES:
+        agg: Dict[str, object] = {
+            "planned": _sum_stats([table[s.name][strategy] for s in specs]),
+            "legacy": _sum_stats([
+                _round_stats(rounds(worker, spec, strategy, n=n_rounds,
+                                    engine="legacy"))
+                for spec in specs
+            ]),
+        }
+        # null (not inf) when legacy restored nothing — keeps the JSON valid
+        agg["eager_speedup"] = (
+            agg["planned"]["restored_GBps"] / agg["legacy"]["restored_GBps"]
+            if agg["legacy"]["restored_GBps"] > 0 else None
+        )
+        engines[strategy] = agg
+        speedup = agg["eager_speedup"]
+        speedup_txt = f"{speedup:.2f}x" if speedup is not None else "n/a"
+        lines.append(csv_row(
+            f"fig5_engine.{strategy}", agg["planned"]["t_eager_s"] * 1e6,
+            f"planned_GBps={agg['planned']['restored_GBps']:.3f};"
+            f"legacy_GBps={agg['legacy']['restored_GBps']:.3f};"
+            f"speedup={speedup_txt}",
+        ))
 
     for spec in specs:
         base = table[spec.name]
-        sf = base["snapfaas"]["e2e"]
+        sf = base["snapfaas"]["e2e_s"]
         for strategy in STRATEGIES:
             row = base[strategy]
             lines.append(csv_row(
-                f"fig5_e2e.{strategy}.{spec.name}", row["e2e"] * 1e6,
-                f"norm_to_snapfaas={row['e2e'] / sf:.2f};"
-                f"boot_us={row['boot']*1e6:.0f};exec_us={row['exec']*1e6:.0f}",
+                f"fig5_e2e.{strategy}.{spec.name}", row["e2e_s"] * 1e6,
+                f"norm_to_snapfaas={row['e2e_s'] / sf:.2f};"
+                f"boot_us={row['boot_s']*1e6:.0f};exec_us={row['exec_s']*1e6:.0f}",
             ))
         # Fig. 5d: speed-up over regular vs function exec time
-        reg = base["regular"]["e2e"]
-        opt = base["optimal"]["e2e"]
+        reg = base["regular"]["e2e_s"]
+        opt = base["optimal"]["e2e_s"]
         lines.append(csv_row(
-            f"fig5d_speedup.{spec.name}", base["snapfaas"]["e2e"] * 1e6,
-            f"snapfaas={reg / base['snapfaas']['e2e']:.2f}x;"
-            f"snapfaas-={reg / base['snapfaas-']['e2e']:.2f}x;"
-            f"reap={reg / base['reap']['e2e']:.2f}x;"
-            f"seuss={reg / base['seuss']['e2e']:.2f}x;"
+            f"fig5d_speedup.{spec.name}", base["snapfaas"]["e2e_s"] * 1e6,
+            f"snapfaas={reg / base['snapfaas']['e2e_s']:.2f}x;"
+            f"snapfaas-={reg / base['snapfaas-']['e2e_s']:.2f}x;"
+            f"reap={reg / base['reap']['e2e_s']:.2f}x;"
+            f"seuss={reg / base['seuss']['e2e_s']:.2f}x;"
             f"optimal={reg / opt:.2f}x",
         ))
+
+    if json_path:
+        update_bench_json(json_path, "coldstart", {
+            "config": {"n_functions": n_functions, "n_rounds": n_rounds},
+            "per_function": {k: dict(v) for k, v in table.items()},
+            "engines": engines,
+        })
     return lines
 
 
 if __name__ == "__main__":
-    for l in run():
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="cold-start latency bench (Fig. 5) + BENCH_coldstart.json"
+    )
+    ap.add_argument("--functions", type=int, default=6)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--json", default="BENCH_coldstart.json",
+                    help="path of the machine-readable results file")
+    args = ap.parse_args()
+    for l in run(n_functions=args.functions, n_rounds=args.rounds,
+                 json_path=args.json):
         print(l)

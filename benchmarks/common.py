@@ -111,7 +111,7 @@ def drop_file_cache(paths) -> None:
 
 
 def cold_request(worker: Worker, spec, strategy: str, *, drop_cache: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, engine: str | None = None):
     """One measured cold request (page cache dropped first — packs AND the
     npz source artifacts, so every strategy's reads hit the medium)."""
     if drop_cache:
@@ -120,18 +120,43 @@ def cold_request(worker: Worker, spec, strategy: str, *, drop_cache: bool = True
     toks = request_tokens(spec, np.random.default_rng(seed),
                           BENCH_CFG.vocab_size, batch=1,
                           seq=getattr(spec, "exec_seq", 32))
-    return worker.handle(spec.name, toks, strategy=strategy, force_cold=True)
+    return worker.handle(spec.name, toks, strategy=strategy, force_cold=True,
+                         engine=engine)
 
 
-def rounds(worker: Worker, spec, strategy: str, n: int = 5, warmup: int = 1):
+def rounds(worker: Worker, spec, strategy: str, n: int = 5, warmup: int = 1,
+           engine: str | None = None):
     """n measured cold rounds (after jit warmup via a warm request)."""
     out = []
     for r in range(warmup):
-        cold_request(worker, spec, strategy, drop_cache=False, seed=r)
+        cold_request(worker, spec, strategy, drop_cache=False, seed=r,
+                     engine=engine)
     for r in range(n):
-        out.append(cold_request(worker, spec, strategy, seed=100 + r))
+        out.append(cold_request(worker, spec, strategy, seed=100 + r,
+                                engine=engine))
     return out
 
 
 def csv_row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def update_bench_json(path: str, section: str, payload) -> None:
+    """Merge one bench's machine-readable results into a shared JSON file
+    (e.g. BENCH_coldstart.json) so future PRs have a perf trajectory to
+    regress against."""
+    import json
+
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    data[section] = payload
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)

@@ -28,8 +28,9 @@ from .planner import (
     plan_restore,
     predict,
 )
-from .registry import STRATEGIES, FunctionRecord, ZygoteRegistry
+from .registry import PLANNED_STRATEGIES, STRATEGIES, FunctionRecord, ZygoteRegistry
 from .restore import (
+    ArrayPatch,
     BasePool,
     MaterializedArray,
     RestoredInstance,
@@ -37,6 +38,11 @@ from .restore import (
     restore_reap,
     restore_regular,
     restore_seuss,
+)
+from .restore_plan import (
+    RestorePlan,
+    build_restore_plan,
+    execute_restore_plan,
 )
 from .snapshot import (
     ArrayMeta,
@@ -50,13 +56,16 @@ from .snapshot import (
 from .workingset import AccessLog, WorkingSet, build_working_set
 
 __all__ = [
-    "AccessLog", "ArrayMeta", "BasePool", "ChunkRef", "ChunkStore",
-    "ColdStartMetrics", "ColdStartPrediction", "DEFAULT_CHUNK_BYTES",
-    "FunctionRecord", "MaterializedArray", "PAPER_C220G5", "RestoredInstance",
-    "STRATEGIES", "SnapshotManifest", "SnapshotSizes", "StorageModel",
-    "TPU_LOCAL_SSD", "TPU_OBJECT_STORE", "WorkingSet", "build_working_set",
-    "calibrate_container", "flatten_pytree", "lower_bound", "plan_restore",
-    "predict", "resolve", "restore_layered", "restore_reap", "restore_regular",
-    "restore_seuss", "take_diff_snapshot", "take_snapshot", "unflatten_paths",
+    "AccessLog", "ArrayMeta", "ArrayPatch", "BasePool", "ChunkRef",
+    "ChunkStore", "ColdStartMetrics", "ColdStartPrediction",
+    "DEFAULT_CHUNK_BYTES", "FunctionRecord", "MaterializedArray",
+    "PAPER_C220G5", "PLANNED_STRATEGIES", "RestoredInstance", "RestorePlan",
+    "STRATEGIES",
+    "SnapshotManifest", "SnapshotSizes", "StorageModel", "TPU_LOCAL_SSD",
+    "TPU_OBJECT_STORE", "WorkingSet", "build_restore_plan",
+    "build_working_set", "calibrate_container", "execute_restore_plan",
+    "flatten_pytree", "lower_bound", "plan_restore", "predict", "resolve",
+    "restore_layered", "restore_reap", "restore_regular", "restore_seuss",
+    "take_diff_snapshot", "take_snapshot", "unflatten_paths",
     "ZygoteRegistry",
 ]

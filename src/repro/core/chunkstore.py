@@ -27,21 +27,79 @@ import json
 import mmap
 import os
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 DEFAULT_CHUNK_BYTES = 256 * 1024
 
+# Gap (bytes) below which two ranges are merged into one sequential read.
+COALESCE_GAP = 64 * 1024
+
+# Max iovec segments per preadv call (POSIX IOV_MAX is >= 1024 on Linux).
+_IOV_MAX = 1024
+
+# Scatter reads larger than this are split so multiple threads can overlap
+# I/O within a single pack.
+_SPLIT_BYTES = 4 * 1024 * 1024
+
 _ZERO_DIGEST = "0" * 32
+
+_HAVE_PREADV = hasattr(os, "preadv")
+
+_io_pool: Optional[ThreadPoolExecutor] = None
+_hash_pool: Optional[ThreadPoolExecutor] = None
+_pool_lock = threading.Lock()
+
+
+def _get_io_pool() -> ThreadPoolExecutor:
+    # I/O threads spend their life blocked in preadv (GIL released), so the
+    # right pool size tracks queue depth, not core count
+    global _io_pool
+    with _pool_lock:
+        if _io_pool is None:
+            _io_pool = ThreadPoolExecutor(
+                max_workers=min(16, 4 * (os.cpu_count() or 2)),
+                thread_name_prefix="chunkstore-io",
+            )
+    return _io_pool
+
+
+def _get_hash_pool() -> ThreadPoolExecutor:
+    global _hash_pool
+    with _pool_lock:
+        if _hash_pool is None:
+            _hash_pool = ThreadPoolExecutor(
+                max_workers=min(8, os.cpu_count() or 2),
+                thread_name_prefix="chunkstore-hash",
+            )
+    return _hash_pool
 
 
 def chunk_digest(data: bytes | memoryview) -> str:
     return hashlib.blake2b(data, digest_size=16).hexdigest()
 
 
+def digest_many(payloads: Sequence[bytes | memoryview]) -> List[str]:
+    """BLAKE2b over a batch of chunks.
+
+    hashlib releases the GIL for buffers > 2 KiB, so batches large enough to
+    amortize thread handoff are hashed across a shared pool; tiny batches run
+    inline.
+    """
+    total = sum(len(p) for p in payloads)
+    if len(payloads) < 4 or total < (1 << 20):
+        return [chunk_digest(p) for p in payloads]
+    return list(_get_hash_pool().map(chunk_digest, payloads))
+
+
 def is_zero(data: bytes | memoryview) -> bool:
-    # fast path: compare against a zero buffer of the same length
-    return bytes(data) == b"\x00" * len(data)
+    # vectorized: no per-call zero-buffer allocation, no bytes() copy
+    if len(data) == 0:
+        return True
+    return not np.frombuffer(data, dtype=np.uint8).any()
 
 
 @dataclass(frozen=True)
@@ -65,6 +123,72 @@ class ChunkRef:
 
 def zero_ref(size: int) -> ChunkRef:
     return ChunkRef(digest=_ZERO_DIGEST, size=size)
+
+
+def scan_chunks(
+    buf: memoryview, chunk_bytes: int = DEFAULT_CHUNK_BYTES
+) -> List[ChunkRef]:
+    """Chunk ``buf`` and compute every chunk's ref in one vectorized pass.
+
+    Zero detection runs as a single ``np.add.reduceat`` over the whole buffer
+    (no per-chunk zero-buffer compares); only non-zero chunks are hashed,
+    batched across the hash pool.
+    """
+    n = len(buf)
+    if n == 0:
+        return []
+    arr = np.frombuffer(buf, dtype=np.uint8)
+    starts = np.arange(0, n, chunk_bytes, dtype=np.int64)
+    nonzero_counts = np.add.reduceat(arr != 0, starts)
+    refs: List[Optional[ChunkRef]] = [None] * len(starts)
+    to_hash: List[int] = []
+    for i, lo in enumerate(starts):
+        size = min(chunk_bytes, n - int(lo))
+        if nonzero_counts[i] == 0:
+            refs[i] = zero_ref(size)
+        else:
+            to_hash.append(i)
+    if to_hash:
+        digests = digest_many(
+            [buf[int(starts[i]) : int(starts[i]) + chunk_bytes] for i in to_hash]
+        )
+        for i, d in zip(to_hash, digests):
+            size = min(chunk_bytes, n - int(starts[i]))
+            refs[i] = ChunkRef(digest=d, size=size)
+    return refs  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# scatter-read planning
+# ---------------------------------------------------------------------------
+
+def coalesce_ranges(
+    ranges: Sequence[Tuple[int, int]], gap: int = COALESCE_GAP
+) -> List[Tuple[int, int, List[int]]]:
+    """Group byte ranges into sequential runs.
+
+    ``ranges`` is a list of ``(offset, size)``.  Returns runs as
+    ``(start, end, member_indices)`` sorted by start, where members are
+    indices into ``ranges`` in offset order and any two consecutive members
+    within a run are separated by at most ``gap`` bytes.  Every input range
+    appears in exactly one run, and runs never overlap.
+    """
+    if not ranges:
+        return []
+    order = sorted(range(len(ranges)), key=lambda i: ranges[i][0])
+    runs: List[Tuple[int, int, List[int]]] = []
+    start, end = ranges[order[0]][0], ranges[order[0]][0] + ranges[order[0]][1]
+    members = [order[0]]
+    for i in order[1:]:
+        off, size = ranges[i]
+        if off <= end + gap:
+            end = max(end, off + size)
+            members.append(i)
+        else:
+            runs.append((start, end, members))
+            start, end, members = off, off + size, [i]
+    runs.append((start, end, members))
+    return runs
 
 
 @dataclass(frozen=True)
@@ -102,6 +226,39 @@ class PackWriter:
         self._f.close()
 
 
+def _read_segments(fd: int, offset: int, iovecs: List[memoryview]) -> int:
+    """Read one sequential run, scattering into ``iovecs`` (preadv when
+    available, pread fallback), looping on short reads."""
+    want = sum(len(v) for v in iovecs)
+    if _HAVE_PREADV:
+        got = 0
+        iov = list(iovecs)
+        while iov:
+            n = os.preadv(fd, iov, offset + got)
+            if n <= 0:
+                raise IOError(
+                    f"short scatter read: got {got} of {want} bytes at {offset}"
+                )
+            got += n
+            while iov and n >= len(iov[0]):
+                n -= len(iov[0])
+                iov.pop(0)
+            if iov and n:
+                iov[0] = iov[0][n:]
+        return got
+    pos = offset
+    for v in iovecs:
+        mv = v
+        while len(mv):
+            data = os.pread(fd, len(mv), pos)
+            if not data:
+                raise IOError(f"short read at {pos}")
+            mv[: len(data)] = data
+            mv = mv[len(data):]
+            pos += len(data)
+    return pos - offset
+
+
 class ChunkStore:
     """Directory-backed content-addressed chunk store.
 
@@ -120,6 +277,7 @@ class ChunkStore:
         self._index: Dict[str, ChunkLoc] = {}
         self._mmaps: Dict[str, mmap.mmap] = {}
         self._files: Dict[str, object] = {}
+        self._fds: Dict[str, int] = {}
         self._lock = threading.Lock()
         self._load_index()
 
@@ -166,24 +324,40 @@ class ChunkStore:
         return PackWriter(path, pack_id)
 
     def put_chunks(
-        self, pack: PackWriter, payloads: Iterable[bytes | memoryview]
+        self,
+        pack: PackWriter,
+        payloads: Sequence[bytes | memoryview],
+        refs: Optional[Sequence[ChunkRef]] = None,
     ) -> List[ChunkRef]:
-        """Store payloads, deduping against the index. Returns refs in order."""
-        refs: List[ChunkRef] = []
-        for data in payloads:
-            if is_zero(data):
-                refs.append(zero_ref(len(data)))
+        """Store payloads, deduping against the index. Returns refs in order.
+
+        ``refs`` may carry precomputed ChunkRefs (from :func:`scan_chunks`)
+        so zero-detection and hashing are not redone per chunk.
+        """
+        if refs is None:
+            zero_mask = [is_zero(p) for p in payloads]
+            digests = digest_many(
+                [p for p, z in zip(payloads, zero_mask) if not z]
+            )
+            it = iter(digests)
+            refs = [
+                zero_ref(len(p)) if z else ChunkRef(digest=next(it), size=len(p))
+                for p, z in zip(payloads, zero_mask)
+            ]
+        out: List[ChunkRef] = []
+        for data, ref in zip(payloads, refs):
+            if ref.zero:
+                out.append(ref)
                 continue
-            d = chunk_digest(data)
             with self._lock:
-                present = d in self._index
+                present = ref.digest in self._index
             if not present:
                 loc = pack.append(data)
                 with self._lock:
                     # re-check under lock (another writer may have raced)
-                    self._index.setdefault(d, loc)
-            refs.append(ChunkRef(digest=d, size=len(data)))
-        return refs
+                    self._index.setdefault(ref.digest, loc)
+            out.append(ref)
+        return out
 
     # ------------------------------------------------------------------- read
 
@@ -216,9 +390,11 @@ class ChunkStore:
         """
         by_pack: Dict[str, List[ChunkLoc]] = {}
         wanted: Dict[Tuple[str, int], str] = {}
+        seen: Set[str] = set()
         for ref in refs:
-            if ref.zero:
+            if ref.zero or ref.digest in seen:
                 continue
+            seen.add(ref.digest)
             loc = self._index[ref.digest]
             by_pack.setdefault(loc.pack, []).append(loc)
             wanted[(loc.pack, loc.offset)] = ref.digest
@@ -246,14 +422,122 @@ class ChunkStore:
                     i = j
         return out
 
+    # ------------------------------------------------------- zero-copy read
+
+    def _pack_fd(self, pack_id: str) -> int:
+        """Shared O_RDONLY fd per pack; pread/preadv take explicit offsets so
+        one fd serves all reader threads."""
+        with self._lock:
+            fd = self._fds.get(pack_id)
+            if fd is None:
+                fd = os.open(
+                    os.path.join(self.root, "packs", f"{pack_id}.pack"), os.O_RDONLY
+                )
+                self._fds[pack_id] = fd
+        return fd
+
+    def read_batch_into(
+        self,
+        dests: Sequence[Tuple[ChunkRef, memoryview]],
+        *,
+        parallel: bool = True,
+        coalesce_gap: int = COALESCE_GAP,
+    ) -> int:
+        """Planned scatter-read: each chunk's payload lands **directly** in
+        its destination buffer with zero intermediate copies.
+
+        ``dests`` pairs each ChunkRef with a writable buffer of exactly
+        ``ref.size`` bytes.  Zero refs are skipped (callers keep destination
+        buffers zeroed).  Repeated digests are read once and replicated with
+        a memcpy.  Per pack, ranges are sorted and coalesced into sequential
+        runs executed with ``preadv`` (destination views interleaved with a
+        scratch view covering each coalescing gap); large runs are split and
+        all runs are issued across a small thread pool so I/O overlaps
+        between packs and within large packs.
+
+        Returns the number of bytes read from storage (gap bytes included).
+        """
+        primary: Dict[str, memoryview] = {}
+        dup: List[Tuple[str, memoryview]] = []
+        by_pack: Dict[str, List[Tuple[int, int, memoryview]]] = {}
+        for ref, buf in dests:
+            if ref.zero:
+                continue
+            view = memoryview(buf)
+            if view.ndim != 1 or view.itemsize != 1:
+                view = view.cast("B")
+            if len(view) != ref.size:
+                raise ValueError(
+                    f"dest for {ref.digest} has {len(view)} bytes, want {ref.size}"
+                )
+            if ref.digest in primary:
+                dup.append((ref.digest, view))
+                continue
+            primary[ref.digest] = view
+            loc = self._index[ref.digest]
+            by_pack.setdefault(loc.pack, []).append((loc.offset, loc.size, view))
+
+        # plan: per pack, coalesce into runs of (file_offset, [iovec segments])
+        jobs: List[Tuple[int, int, List[memoryview]]] = []  # (fd, offset, iovecs)
+        for pack_id, items in by_pack.items():
+            fd = self._pack_fd(pack_id)
+            runs = coalesce_ranges([(off, size) for off, size, _ in items],
+                                   gap=coalesce_gap)
+            for start, end, members in runs:
+                segs: List[memoryview] = []
+                pos = start
+                for i in members:
+                    off, size, view = items[i]
+                    if off > pos:  # coalescing gap → discard into scratch
+                        segs.append(memoryview(bytearray(off - pos)))
+                        pos = off
+                    if off + size <= pos:
+                        continue  # fully inside an already-covered range
+                    if off < pos:  # partial overlap (shouldn't happen: chunks
+                        view = view[pos - off:]  # are disjoint, but stay safe)
+                        off = pos
+                    segs.append(view)
+                    pos = off + len(view)
+                if pos < end:
+                    segs.append(memoryview(bytearray(end - pos)))
+                # split long runs so threads overlap I/O inside one pack, and
+                # respect IOV_MAX per syscall
+                cur: List[memoryview] = []
+                cur_off = start
+                cur_bytes = 0
+                for seg in segs:
+                    cur.append(seg)
+                    cur_bytes += len(seg)
+                    if cur_bytes >= _SPLIT_BYTES or len(cur) >= _IOV_MAX:
+                        jobs.append((fd, cur_off, cur))
+                        cur_off += cur_bytes
+                        cur, cur_bytes = [], 0
+                if cur:
+                    jobs.append((fd, cur_off, cur))
+
+        total = 0
+        if parallel and len(jobs) > 1:
+            for n in _get_io_pool().map(lambda j: _read_segments(*j), jobs):
+                total += n
+        else:
+            for j in jobs:
+                total += _read_segments(*j)
+
+        for digest, view in dup:
+            view[:] = primary[digest]
+        return total
+
     def close(self) -> None:
         with self._lock:
             for m in self._mmaps.values():
                 m.close()
             for f in self._files.values():
                 f.close()  # type: ignore[attr-defined]
+            for fd in self._fds.values():
+                os.close(fd)
             self._mmaps.clear()
             self._files.clear()
+            self._fds.clear()
 
     def drop_page_cache(self) -> None:
         """Evict pack pages from the OS page cache so benchmark reads hit

@@ -31,6 +31,7 @@ from .restore import (
     restore_regular,
     restore_seuss,
 )
+from .restore_plan import RestorePlan, build_restore_plan, execute_restore_plan
 from .snapshot import (
     SnapshotManifest,
     flatten_pytree,
@@ -44,6 +45,10 @@ Path = str
 
 STRATEGIES = ("regular", "reap", "seuss", "snapfaas-", "snapfaas")
 
+# snapshot strategies served by the planned restore engine (the others
+# restore via source loaders and have no plan)
+PLANNED_STRATEGIES = ("reap", "snapfaas-", "snapfaas")
+
 
 @dataclass
 class FunctionRecord:
@@ -55,6 +60,7 @@ class FunctionRecord:
     ws_full: Optional[WorkingSet] = None  # over the full snapshot (REAP)
     source_path: str = ""               # original checkpoint (SEUSS/regular)
     init_compute_s: float = 0.0         # measured function-init compute
+    plans: Dict[str, RestorePlan] = field(default_factory=dict)  # per strategy
 
 
 class ZygoteRegistry:
@@ -128,8 +134,42 @@ class ZygoteRegistry:
             rec.full.snapshot_id, resolve(None, rec.full), log
         )
         rec.ws_full.save(self.root)
+        rec.plans.clear()  # WS changed → cached eager placement is stale
 
     # -- cold start -----------------------------------------------------------
+
+    def restore_plan(self, name: str, strategy: str) -> RestorePlan:
+        """The cached RestorePlan for (function, strategy); built on first use.
+
+        Resolving layers, classifying chunks and computing scatter-read
+        destinations happens here exactly once — cold starts only execute.
+        """
+        rec = self.functions[name]
+        plan = rec.plans.get(strategy)
+        if plan is not None:
+            return plan
+        base = self.bases[rec.runtime]
+        if strategy == "snapfaas":
+            if rec.ws is None:
+                raise ValueError(f"{name}: no working set; run generate_working_set")
+            plan = build_restore_plan(
+                base, rec.diff, working_set=rec.ws,
+                strategy="snapfaas", function=name,
+            )
+        elif strategy == "snapfaas-":
+            plan = build_restore_plan(
+                base, rec.diff, working_set=None,
+                strategy="snapfaas-", function=name,
+            )
+        elif strategy == "reap":
+            plan = build_restore_plan(
+                None, rec.full, working_set=rec.ws_full,
+                strategy="reap", function=name, use_pool=False,
+            )
+        else:
+            raise ValueError(f"no restore plan for strategy {strategy!r}")
+        rec.plans[strategy] = plan
+        return plan
 
     def cold_start(
         self,
@@ -139,10 +179,28 @@ class ZygoteRegistry:
         residual_init: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None,
         source_loader: Optional[Callable[[], Dict[Path, np.ndarray]]] = None,
         base_loader: Optional[Callable[[], Dict[Path, np.ndarray]]] = None,
+        engine: Optional[str] = None,
     ) -> RestoredInstance:
+        """Cold-start ``name`` with ``strategy``.
+
+        ``engine`` selects the snapshot-restore implementation for the
+        snapshot strategies: "planned" (default; cached RestorePlan +
+        zero-copy parallel scatter-reads) or "legacy" (the seed per-restore
+        resolve + 3-copy batched read — kept as the benchmark baseline).
+        Defaults to ``$REPRO_RESTORE_ENGINE`` or "planned".
+        """
         rec = self.functions[name]
         base = self.bases[rec.runtime]
         pool = self.pools[rec.runtime]
+        engine = engine or os.environ.get("REPRO_RESTORE_ENGINE", "planned")
+        if engine not in ("planned", "legacy"):
+            raise ValueError(f"unknown restore engine {engine!r}")
+        if engine == "planned" and strategy in PLANNED_STRATEGIES:
+            plan = self.restore_plan(name, strategy)
+            return execute_restore_plan(
+                plan, self.store, pool if strategy != "reap" else None,
+                residual_init=residual_init,
+            )
         if strategy == "snapfaas":
             if rec.ws is None:
                 raise ValueError(f"{name}: no working set; run generate_working_set")

@@ -58,20 +58,23 @@ class BasePool:
     @staticmethod
     def load(store: ChunkStore, manifest: SnapshotManifest) -> "BasePool":
         pool = BasePool(manifest)
-        refs: List[ChunkRef] = []
-        for meta in manifest.arrays.values():
-            refs.extend(c for c in meta.chunks if c is not None and not c.zero)
-        payloads = store.read_batch(refs)
+        # one scatter-read across every array: payloads land directly in the
+        # pool buffers (zero intermediate copies)
+        bufs: Dict[Path, np.ndarray] = {}
+        dests: List[Tuple[ChunkRef, memoryview]] = []
         for path, meta in manifest.arrays.items():
             buf = np.zeros(meta.nbytes, dtype=np.uint8)
+            bufs[path] = buf
+            mv = memoryview(buf)
             off = 0
             for c in meta.chunks:
                 assert c is not None
                 if not c.zero:
-                    data = payloads[c.digest]
-                    buf[off : off + c.size] = np.frombuffer(data, dtype=np.uint8)
+                    dests.append((c, mv[off : off + c.size]))
                 off += c.size
-            arr = buf.view(np.dtype(meta.dtype)).reshape(meta.shape)
+        store.read_batch_into(dests)
+        for path, meta in manifest.arrays.items():
+            arr = bufs[path].view(np.dtype(meta.dtype)).reshape(meta.shape)
             arr.flags.writeable = False
             pool._arrays[path] = arr
         return pool
@@ -98,6 +101,26 @@ _SHARED = "shared"
 _PRIVATE = "private"
 
 
+@dataclass
+class ArrayPatch:
+    """On-device patch descriptor: base ⊕ diff as a selective-copy kernel.
+
+    ``rows`` holds every non-zero eager diff chunk of the array, packed as
+    fixed-stride rows (the scatter-read engine reads payloads straight into
+    them); ``sel[i]`` is the row overriding chunk ``i`` of the array, or -1
+    to keep the base chunk.  Zero diff chunks point at a shared all-zero row.
+    This is exactly the input layout of ``kernels.snapshot_patch``.
+    """
+
+    sel: np.ndarray            # (n_chunks,) int32
+    rows: np.ndarray           # uint8, n_rows * chunk_bytes (flat)
+    row_of: Dict[int, int]     # non-zero diff chunk idx -> row
+    chunk_bytes: int
+
+    def rows_2d(self) -> np.ndarray:
+        return self.rows.reshape(-1, self.chunk_bytes)
+
+
 class MaterializedArray:
     """One array of a restored instance.
 
@@ -106,7 +129,7 @@ class MaterializedArray:
     """
 
     __slots__ = ("path", "meta", "state", "_arr", "_buf", "_pending", "_store",
-                 "_pool", "written")
+                 "_pool", "written", "patch", "_dev")
 
     def __init__(self, path: Path, meta: ArrayMeta):
         self.path = path
@@ -114,13 +137,20 @@ class MaterializedArray:
         self.state = _PRIVATE
         self._arr: Optional[np.ndarray] = None
         self._buf: Optional[np.ndarray] = None  # uint8 backing for private
-        # pending chunks: (idx, ref|None, "store"|"pool") — "pool" entries
-        # memcpy from the in-RAM base (CoW-page materialization, term D);
-        # "store" entries are synchronous disk faults (REAP semantics).
+        # pending chunks: (idx, ref|None, "store"|"pool"|"rows") — "pool"
+        # entries memcpy from the in-RAM base (CoW-page materialization,
+        # term D); "store" entries are synchronous disk faults (REAP
+        # semantics); "rows" entries memcpy from the already-read packed
+        # diff-rows buffer of ``patch`` (no storage I/O).
         self._pending: List[Tuple[int, Optional[ChunkRef], str]] = []
         self._store: Optional[ChunkStore] = None
         self._pool: Optional["BasePool"] = None
         self.written = False
+        # on-device patch descriptor (set by the planned restore engine when
+        # the array is base⊕diff patchable on the accelerator) + the cached
+        # patched device array
+        self.patch: Optional["ArrayPatch"] = None
+        self._dev: Optional[Any] = None
 
     # -- constructors ------------------------------------------------------
     @staticmethod
@@ -154,6 +184,12 @@ class MaterializedArray:
             data = self._pool.chunk_bytes_of(self.path, idx)
             self._buf[lo : lo + len(data)] = data
             return len(data)
+        if src == "rows":
+            assert self.patch is not None
+            size = min(self.meta.chunk_bytes, self.meta.nbytes - lo)
+            row = self.patch.row_of[idx]
+            self._buf[lo : lo + size] = self.patch.rows_2d()[row, :size]
+            return size
         assert self._store is not None and ref is not None
         data = self._store.get_chunk(ref)
         self._buf[lo : lo + len(data)] = np.frombuffer(data, dtype=np.uint8)
@@ -241,6 +277,7 @@ class MaterializedArray:
         else:
             self.read(metrics)
         self.written = True
+        self._dev = None  # device copy no longer reflects host content
         assert self._arr is not None
         if not self._arr.flags.writeable:
             self._arr = np.array(self._arr)

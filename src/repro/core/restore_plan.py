@@ -1,0 +1,249 @@
+"""Planned restore engine: resolve once, scatter-read forever.
+
+The seed restore path re-resolved the (base, diff) layering, re-planned the
+eager read and re-walked every chunk's digest dict on *every* cold start —
+and each eager byte crossed three buffers on its way to the instance (pack
+read → digest-keyed bytes → frombuffer → destination slice).  This module
+splits restoration into:
+
+* :func:`build_restore_plan` — run once per (function, strategy) and cached
+  on the :class:`~repro.core.registry.FunctionRecord`.  Resolves layering,
+  classifies every chunk (shared / eager / pending-pool / pending-store),
+  and pre-computes each eager chunk's destination offset.
+* :func:`execute_restore_plan` — the per-cold-start hot path: allocate the
+  private buffers, hand ``(ref, destination view)`` pairs to
+  ``ChunkStore.read_batch_into`` (coalesced ``preadv`` scatter-reads, a
+  thread pool overlapping I/O across packs), wire up MaterializedArrays.
+  Zero intermediate copies; the plan itself allocates nothing per restore.
+
+Arrays whose diff is fully eager and whose base lives in the pool also get
+an :class:`~repro.core.restore.ArrayPatch`: their diff chunks are read into
+a packed rows buffer instead of being assembled on the host, so the serving
+layer can apply them on-device with the ``snapshot_patch`` Pallas kernel
+(base chunks never cross the host at all).  Host reads still work — the
+rows buffer doubles as a pending-chunk source.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .chunkstore import ChunkRef, ChunkStore
+from .metrics import ColdStartMetrics, timer
+from .restore import ArrayPatch, BasePool, MaterializedArray, RestoredInstance
+from .snapshot import ArrayMeta, SnapshotManifest, resolve
+from .workingset import WorkingSet
+
+Path = str
+
+PendingEntry = Tuple[int, Optional[ChunkRef], str]
+
+
+@dataclass(frozen=True)
+class PlanArray:
+    """Everything execute() needs to materialize one array, precomputed."""
+
+    path: Path
+    meta: ArrayMeta
+    shared: bool
+    # private-array placement (all offsets precomputed at build time):
+    pending: Tuple[PendingEntry, ...] = ()
+    eager: Tuple[Tuple[int, ChunkRef], ...] = ()       # (buffer offset, ref)
+    # on-device patch layout (None → not patchable):
+    patch_sel: Optional[np.ndarray] = None             # (n_chunks,) int32
+    patch_rows: int = 0                                # rows in the buffer
+    patch_row_of: Optional[Dict[int, int]] = None
+    patch_eager: Tuple[Tuple[int, ChunkRef], ...] = () # (row offset, ref)
+
+
+@dataclass
+class RestorePlan:
+    """Cached restore recipe for one (function, strategy) pair."""
+
+    function: str
+    strategy: str
+    base_id: Optional[str]
+    diff_id: str
+    arrays: List[PlanArray]
+    device_state: Dict[str, Any]
+    eager_bytes: int = 0
+    eager_chunks: int = 0
+    shared_bytes: int = 0
+
+
+def build_restore_plan(
+    base: Optional[SnapshotManifest],
+    diff: SnapshotManifest,
+    *,
+    working_set: Optional[WorkingSet],
+    strategy: str,
+    function: str = "",
+    use_pool: bool = True,
+) -> RestorePlan:
+    """Resolve layering and classify every chunk — once, off the hot path.
+
+    ``use_pool`` is True for the layered strategies (base chunks memcpy from
+    the in-RAM pool) and False for REAP (no sharing: base chunks read from
+    storage like everything else).
+    """
+    resolved = resolve(base, diff)
+    device_state: Dict[str, Any] = dict(base.device_state) if base else {}
+    device_state.update(diff.device_state)
+
+    arrays: List[PlanArray] = []
+    eager_bytes = eager_chunks = shared_bytes = 0
+    for path, ra in resolved.items():
+        meta = ra.meta
+        dirty = ra.dirty_indices()
+        if use_pool and not dirty:
+            arrays.append(PlanArray(path=path, meta=meta, shared=True))
+            shared_bytes += meta.nbytes
+            continue
+
+        def in_ws(idx: int) -> bool:
+            return working_set is None or (path, idx) in working_set
+
+        base_meta = base.arrays.get(path) if base is not None else None
+        patchable = (
+            use_pool
+            and bool(dirty)
+            and base_meta is not None
+            and base_meta.shape == meta.shape
+            and base_meta.dtype == meta.dtype
+            and base_meta.chunk_bytes == meta.chunk_bytes
+            and meta.chunk_bytes % np.dtype(meta.dtype).itemsize == 0
+            and all(in_ws(i) for i in dirty)
+        )
+
+        pending: List[PendingEntry] = []
+        eager: List[Tuple[int, ChunkRef]] = []
+        patch_eager: List[Tuple[int, ChunkRef]] = []
+        row_of: Dict[int, int] = {}
+        sel = (
+            np.full(len(ra.sources), -1, dtype=np.int32) if patchable else None
+        )
+        n_rows = 0
+        zero_row: Optional[int] = None
+        cb = meta.chunk_bytes
+        for idx, (src, ref) in enumerate(ra.sources):
+            lo = idx * cb
+            if src == "base":
+                if ref.zero:
+                    continue
+                if use_pool:
+                    pending.append((idx, None, "pool"))
+                elif in_ws(idx):
+                    eager.append((lo, ref))
+                else:
+                    pending.append((idx, ref, "store"))
+                continue
+            # diff chunk
+            if patchable:
+                assert sel is not None
+                if ref.zero:
+                    if zero_row is None:
+                        zero_row = n_rows
+                        n_rows += 1
+                    sel[idx] = zero_row
+                else:
+                    row_of[idx] = n_rows
+                    sel[idx] = n_rows
+                    patch_eager.append((n_rows * cb, ref))
+                    pending.append((idx, None, "rows"))
+                    n_rows += 1
+                continue
+            if ref.zero:
+                continue
+            if in_ws(idx):
+                eager.append((lo, ref))
+            else:
+                pending.append((idx, ref, "store"))
+
+        eager_bytes += sum(r.size for _, r in eager)
+        eager_bytes += sum(r.size for _, r in patch_eager)
+        eager_chunks += len(eager) + len(patch_eager)
+        arrays.append(PlanArray(
+            path=path, meta=meta, shared=False,
+            pending=tuple(pending), eager=tuple(eager),
+            patch_sel=sel if patchable else None,
+            patch_rows=n_rows,
+            patch_row_of=row_of if patchable else None,
+            patch_eager=tuple(patch_eager),
+        ))
+
+    return RestorePlan(
+        function=function, strategy=strategy,
+        base_id=base.snapshot_id if base else None,
+        diff_id=diff.snapshot_id,
+        arrays=arrays, device_state=device_state,
+        eager_bytes=eager_bytes, eager_chunks=eager_chunks,
+        shared_bytes=shared_bytes,
+    )
+
+
+def execute_restore_plan(
+    plan: RestorePlan,
+    store: ChunkStore,
+    pool: Optional[BasePool],
+    *,
+    residual_init: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None,
+) -> RestoredInstance:
+    """The cold-start hot path: allocate, scatter-read, done.
+
+    Steps map to Eq. 1: A = buffer pre-allocation + device-state restore,
+    B = one parallel zero-copy scatter-read of every eager chunk,
+    C = residual init, D = charged later by MaterializedArray.
+    """
+    m = ColdStartMetrics(strategy=plan.strategy, function=plan.function)
+    t = timer()
+
+    # A: allocate every private buffer up front and wire the instance.
+    arrays: Dict[Path, MaterializedArray] = {}
+    dests: List[Tuple[ChunkRef, memoryview]] = []
+    for pa in plan.arrays:
+        if pa.shared:
+            assert pool is not None
+            arrays[pa.path] = MaterializedArray.shared(
+                pa.path, pa.meta, pool.get(pa.path)
+            )
+            continue
+        buf = np.zeros(pa.meta.nbytes, dtype=np.uint8)
+        ma = MaterializedArray.private(
+            pa.path, pa.meta, buf, list(pa.pending), store, pool
+        )
+        if pa.patch_sel is not None:
+            rows = np.zeros(pa.patch_rows * pa.meta.chunk_bytes, dtype=np.uint8)
+            ma.patch = ArrayPatch(
+                sel=pa.patch_sel, rows=rows,
+                row_of=pa.patch_row_of or {}, chunk_bytes=pa.meta.chunk_bytes,
+            )
+            mv_rows = memoryview(rows)
+            for off, ref in pa.patch_eager:
+                dests.append((ref, mv_rows[off : off + ref.size]))
+        if pa.eager:
+            mv = memoryview(buf)
+            for off, ref in pa.eager:
+                dests.append((ref, mv[off : off + ref.size]))
+        arrays[pa.path] = ma
+    m.shared_bytes_mapped = plan.shared_bytes
+    m.t_preconfig = t.lap()
+
+    # B: one batched parallel scatter-read, straight into the buffers.
+    store.read_batch_into(dests)
+    m.t_eager = t.lap()
+    m.eager_bytes = plan.eager_bytes
+    m.eager_chunks = plan.eager_chunks
+
+    # C: residual, un-memoizable initialization.
+    device_state = dict(plan.device_state)
+    if residual_init is not None:
+        device_state = residual_init(device_state)
+    m.t_init = t.lap()
+
+    return RestoredInstance(
+        function=plan.function, strategy=plan.strategy, arrays=arrays,
+        device_state=device_state, metrics=m,
+    )

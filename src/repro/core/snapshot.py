@@ -36,6 +36,7 @@ from .chunkstore import (
     ChunkRef,
     ChunkStore,
     chunk_payloads,
+    scan_chunks,
     zero_ref,
 )
 
@@ -211,7 +212,9 @@ def take_snapshot(
     arrays: Dict[Path, ArrayMeta] = {}
     for path, arr in flat.items():
         buf = _array_bytes(arr)
-        refs = store.put_chunks(pack, chunk_payloads(buf, chunk_bytes))
+        # one vectorized zero-scan + batched hash pass over the whole array
+        refs = scan_chunks(buf, chunk_bytes)
+        refs = store.put_chunks(pack, chunk_payloads(buf, chunk_bytes), refs=refs)
         arrays[path] = ArrayMeta(
             shape=tuple(arr.shape), dtype=str(arr.dtype), chunk_bytes=chunk_bytes, chunks=list(refs)
         )
@@ -267,23 +270,23 @@ def take_diff_snapshot(
             )
             continue
         chunks: List[Optional[ChunkRef]] = []
-        dirty_payloads: List[Tuple[int, memoryview]] = []
-        from .chunkstore import chunk_digest, is_zero  # local import to keep API small
-
-        for i, p in enumerate(payloads):
+        dirty_payloads: List[memoryview] = []
+        dirty_refs: List[ChunkRef] = []
+        # one vectorized zero-scan + batched hash pass, then compare digests
+        refs = scan_chunks(buf, cb)
+        for i, (p, ref) in enumerate(zip(payloads, refs)):
             base_ref = base_meta.chunks[i]
-            if is_zero(p):
-                ref = zero_ref(len(p))
+            if ref.zero:
                 chunks.append(None if base_ref == ref else ref)
                 continue
-            d = chunk_digest(p)
-            if base_ref is not None and base_ref.digest == d:
+            if base_ref is not None and base_ref.digest == ref.digest:
                 chunks.append(None)  # clean — inherit from base
             else:
-                dirty_payloads.append((i, p))
-                chunks.append(ChunkRef(digest=d, size=len(p)))
+                dirty_payloads.append(p)
+                dirty_refs.append(ref)
+                chunks.append(ref)
         if dirty_payloads:
-            store.put_chunks(pack, [p for _, p in dirty_payloads])
+            store.put_chunks(pack, dirty_payloads, refs=dirty_refs)
         arrays[path] = ArrayMeta(
             shape=tuple(arr.shape), dtype=str(arr.dtype), chunk_bytes=cb, chunks=chunks
         )

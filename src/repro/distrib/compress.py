@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
+
 PyTree = Any
 
 
@@ -62,7 +64,7 @@ def ef_compressed_mean(
 
     other = tuple(a for a in mesh.axis_names if a != axis)
     in_spec = P(axis, *([None] * (partial.ndim - 1)))
-    return jax.shard_map(
+    return shard_map(
         inner, mesh=mesh, in_specs=(in_spec, in_spec),
         out_specs=(in_spec, in_spec), check_vma=False,
     )(partial, error)

@@ -153,19 +153,48 @@ def parse_module(text: str) -> Tuple[Dict[str, Comp], Optional[str]]:
     return comps, entry
 
 
+def _split_operands(inner: str) -> List[str]:
+    """Split an operand list on commas outside [] / {} (shapes and layouts
+    contain commas: ``dot(f32[128,128]{1,0} %a, ...)``)."""
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in inner:
+        if ch in "[{":
+            depth += 1
+        elif ch in "]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return parts
+
+
 def _dot_flops(comp: Comp, ins: Instr) -> float:
     out_elems = 1
     for d in ins.out_dims:
         out_elems *= d
+    lhs_dims: List[int] = []
     lhs_name = None
     om = _OPERANDS_RE.search(ins.line)
     if om:
-        ops = [o.strip().lstrip("%") for o in om.group(1).split(",")]
+        ops = _split_operands(om.group(1))
         if ops:
-            lhs_name = ops[0].split(" ")[-1].lstrip("%")
+            # modern HLO dumps inline the operand type: read lhs dims directly
+            sm = _SHAPE_RE.search(ops[0])
+            if sm and sm.group(2).strip():
+                lhs_dims = [int(x) for x in sm.group(2).split(",")]
+            nm = re.search(r"%?([\w.\-]+)\s*$", ops[0])
+            if nm:
+                lhs_name = nm.group(1)
+    if not lhs_dims:
+        lhs_dims = comp.shapes.get(lhs_name or "", [])
     K = 1
     cm = _LHS_CONTRACT_RE.search(ins.line)
-    lhs_dims = comp.shapes.get(lhs_name or "", [])
     if cm and lhs_dims:
         for ds in cm.group(1).split(","):
             if ds.strip() and int(ds) < len(lhs_dims):

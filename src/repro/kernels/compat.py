@@ -1,0 +1,9 @@
+"""Version compatibility shims for Pallas APIs that moved between jax
+releases (the distribution-layer analogue lives in repro.distrib.compat)."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

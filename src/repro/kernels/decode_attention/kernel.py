@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -114,7 +116,7 @@ def decode_attention_int8(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, nkv, rep, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

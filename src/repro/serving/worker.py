@@ -22,7 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AccessLog, ColdStartMetrics, RestoredInstance, ZygoteRegistry
+from repro.core.restore import MaterializedArray
 from repro.core.snapshot import flatten_pytree, resolve
+from repro.kernels.snapshot_patch import patch_apply_op
 from repro.models import Batch, Model
 
 PyTree = Any
@@ -133,6 +135,48 @@ class Worker:
 
     # -- request path --------------------------------------------------------------
 
+    def _maybe_device_patch(
+        self, family: str, path: str, ma: MaterializedArray
+    ) -> Optional[jax.Array]:
+        """Apply this array's diff chunks to the device-resident base copy.
+
+        The planned restore engine leaves patchable arrays as (packed diff
+        rows + selection map) instead of assembling them on the host; here
+        the ``snapshot_patch`` kernel fuses base ⊕ diff directly in device
+        memory — base chunks never cross the host, diff chunks cross it once
+        (the scatter-read).  Result is complete (every diff chunk applied),
+        so it supersedes row-granular host materialization.  Cached per
+        instance; invalidated by host writes.
+        """
+        if ma.patch is None or ma.written:
+            return None
+        if ma._dev is not None:
+            return ma._dev
+        pool_dev = getattr(self, "_pool_dev", {}).get(family, {})
+        base_dev = pool_dev.get(path)
+        if base_dev is None:
+            return None
+        meta = ma.meta
+        itemsize = np.dtype(meta.dtype).itemsize
+        c = meta.chunk_bytes // itemsize
+        n = meta.num_chunks()
+        total = meta.nbytes // itemsize
+        rows2d = ma.patch.rows_2d()
+        if rows2d.shape[0] == 0:
+            return None  # nothing to patch (shouldn't happen: plan skips)
+        diff2d = jnp.asarray(rows2d.view(np.dtype(meta.dtype)))
+        flat = base_dev.reshape(-1)
+        if n * c != total:  # partial tail chunk: pad base, slice after
+            flat = jnp.pad(flat, (0, n * c - total))
+        on_tpu = jax.default_backend() == "tpu"
+        out = patch_apply_op(
+            flat.reshape(n, c), diff2d, jnp.asarray(ma.patch.sel),
+            mode="replace", interpret=not on_tpu, use_kernel=on_tpu,
+        )
+        out = out.reshape(-1)[:total].reshape(meta.shape)
+        ma._dev = out
+        return out
+
     def _params_for(
         self, spec: FunctionSpec, inst: RestoredInstance,
         request_rows: Optional[Dict[str, np.ndarray]] = None,
@@ -158,6 +202,9 @@ class Worker:
             ma = inst.arrays[path]
             if ma.state == "shared" and not ma.written and path in pool_dev:
                 return pool_dev[path]  # zero-copy CoW share
+            dev = self._maybe_device_patch(spec.family, path, ma)
+            if dev is not None:
+                return dev  # base ⊕ diff fused on device
             if path in rows:
                 arr = ma.ensure_rows(rows[path], inst.metrics)
             else:
@@ -173,6 +220,7 @@ class Worker:
         *,
         strategy: str = "snapfaas",
         force_cold: bool = False,
+        engine: Optional[str] = None,
     ) -> RequestResult:
         spec = self.specs[fn]
         t0 = time.perf_counter()
@@ -184,6 +232,7 @@ class Worker:
             inst = self.registry.cold_start(
                 fn, strategy,
                 residual_init=lambda ds: {**ds, "kv_ready": True},
+                engine=engine,
                 **loaders,
             )
         boot = time.perf_counter() - t0
@@ -199,7 +248,13 @@ class Worker:
         if inst.metrics is not None:
             inst.metrics.t_exec = exec_s
 
-        nbytes = sum(a.meta.nbytes for a in inst.arrays.values())
+        # charge host buffers AND cached patched device copies (ma._dev) to
+        # the pool budget — a warm patchable instance pins a full-size
+        # accelerator copy, so residency must reflect it (Fig. 7's trade)
+        nbytes = sum(
+            a.meta.nbytes * (2 if a._dev is not None else 1)
+            for a in inst.arrays.values()
+        )
         self.pool.put(fn, inst, nbytes)
         return RequestResult(
             function=fn, cold=cold, strategy=strategy if cold else "warm",

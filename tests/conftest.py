@@ -1,0 +1,93 @@
+"""Test-session setup.
+
+The property tests want `hypothesis` (declared in pyproject's dev extras).
+Some execution environments (e.g. the hermetic bench container) cannot
+install it; rather than losing the whole module to a collection error, this
+conftest installs a minimal deterministic fallback that supports the small
+strategy surface the tests use (integers / lists / tuples / sampled_from /
+booleans) and runs each property over a fixed number of seeded random
+examples.  With real hypothesis installed the fallback is inert.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+
+def _install_hypothesis_fallback() -> None:
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def sampled_from(seq):
+        elems = list(seq)
+        return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+    def lists(elem, min_size=0, max_size=10, **_):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def tuples(*elems):
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+    def given(**strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            remaining = [p for name, p in sig.parameters.items()
+                         if name not in strategies]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                for i in range(n):
+                    rng = np.random.default_rng(0xC0FFEE + i)
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            return wrapper
+        return deco
+
+    def settings(max_examples=10, deadline=None, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.booleans = booleans
+    st_mod.sampled_from = sampled_from
+    st_mod.lists = lists
+    st_mod.tuples = tuples
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st_mod
+    hyp.__fallback__ = True
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:  # pragma: no cover - trivial import probe
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _install_hypothesis_fallback()

@@ -1,0 +1,353 @@
+"""Planned restore engine: equivalence with the seed path, scatter-read
+correctness, coalescing properties, and the on-device patch path."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AccessLog,
+    ChunkStore,
+    ZygoteRegistry,
+    flatten_pytree,
+)
+from repro.core.chunkstore import COALESCE_GAP, coalesce_ranges, scan_chunks
+
+CHUNK = 4096
+
+
+def _tree(seed=0, n=3, rows=128, cols=32):
+    rng = np.random.default_rng(seed)
+    return {
+        f"layer{i}": {
+            "w": rng.standard_normal((rows, cols)).astype(np.float32),
+            "b": rng.standard_normal((cols,)).astype(np.float32),
+        }
+        for i in range(n)
+    }
+
+
+def _registry(tmp_path, *, ws=True):
+    reg = ZygoteRegistry(str(tmp_path / "reg"), chunk_bytes=CHUNK)
+    base_tree = _tree(seed=0)
+    reg.register_runtime("fam", base_tree)
+    variant = _tree(seed=0)
+    variant["layer2"]["w"] = variant["layer2"]["w"] + 0.5       # dirty array
+    variant["layer1"]["w"][:8] = 0.0                            # zeroed rows
+    variant["head"] = {"w": np.full((16, 16), 2.0, np.float32)}  # new array
+    reg.register_function("fn", "fam", variant)
+    if ws:
+        log = AccessLog()
+        for p in ("layer0/w", "layer0/b", "layer1/w", "layer2/w", "head/w"):
+            log.touch(p)
+        reg.generate_working_set("fn", log)
+    return reg, variant
+
+
+# ---------------------------------------------------------- engine equivalence
+
+class TestEngineEquivalence:
+    @pytest.mark.parametrize("strategy", ["snapfaas", "snapfaas-", "reap"])
+    def test_planned_matches_legacy_bytes(self, tmp_path, strategy):
+        """Restored bytes from the plan-based path are byte-identical to the
+        seed (legacy) path, for every array and every snapshot strategy."""
+        reg, variant = _registry(tmp_path)
+        legacy = reg.cold_start("fn", strategy, engine="legacy")
+        planned = reg.cold_start("fn", strategy, engine="planned")
+        assert set(legacy.arrays) == set(planned.arrays)
+        for path in legacy.arrays:
+            a, b = legacy.value(path), planned.value(path)
+            assert a.dtype == b.dtype and a.shape == b.shape, path
+            np.testing.assert_array_equal(a, b, err_msg=f"{strategy}/{path}")
+
+    @pytest.mark.parametrize("strategy", ["snapfaas", "snapfaas-", "reap"])
+    def test_planned_matches_source_variant(self, tmp_path, strategy):
+        reg, variant = _registry(tmp_path)
+        inst = reg.cold_start("fn", strategy, engine="planned")
+        for path, expected in flatten_pytree(variant).items():
+            np.testing.assert_array_equal(inst.value(path), expected, err_msg=path)
+
+    def test_seuss_and_regular_match(self, tmp_path):
+        """The loader strategies restore the same values (they bypass the
+        plan engine; included so all five strategies are pinned here)."""
+        reg, variant = _registry(tmp_path)
+        flat = flatten_pytree(variant)
+        src = lambda: {p: np.array(a) for p, a in flat.items()
+                       if "head" in p or "layer2/w" in p or "layer1/w" in p}
+        base = lambda: {p: np.array(a) for p, a in flat.items()}
+        for strategy, kw in (
+            ("seuss", dict(source_loader=src)),
+            ("regular", dict(source_loader=src, base_loader=base)),
+        ):
+            inst = reg.cold_start("fn", strategy, **kw)
+            for path, expected in flat.items():
+                np.testing.assert_array_equal(
+                    inst.value(path), expected, err_msg=f"{strategy}/{path}"
+                )
+
+    def test_plan_is_cached_and_invalidated(self, tmp_path):
+        reg, _ = _registry(tmp_path)
+        reg.cold_start("fn", "snapfaas")
+        rec = reg.functions["fn"]
+        plan = rec.plans["snapfaas"]
+        reg.cold_start("fn", "snapfaas")
+        assert rec.plans["snapfaas"] is plan  # cached, not rebuilt
+        reg.generate_working_set("fn", AccessLog())  # WS change → stale
+        assert not rec.plans
+
+    def test_eager_accounting_matches_legacy(self, tmp_path):
+        reg, _ = _registry(tmp_path)
+        for strategy in ("snapfaas", "snapfaas-", "reap"):
+            a = reg.cold_start("fn", strategy, engine="legacy").metrics
+            b = reg.cold_start("fn", strategy, engine="planned").metrics
+            assert a.eager_bytes == b.eager_bytes, strategy
+            assert a.eager_chunks == b.eager_chunks, strategy
+
+    def test_demand_paging_still_works(self, tmp_path):
+        """With an empty WS nothing is eager; first read demand-faults."""
+        reg, variant = _registry(tmp_path)
+        reg.generate_working_set("fn", AccessLog())
+        inst = reg.cold_start("fn", "snapfaas", engine="planned")
+        assert inst.metrics.eager_bytes == 0
+        np.testing.assert_array_equal(
+            inst.value("layer2/w"), variant["layer2"]["w"]
+        )
+        assert inst.metrics.demand_chunks > 0
+
+
+# ------------------------------------------------------------- scatter reads
+
+class TestReadBatchInto:
+    def _store(self, tmp_path, n=40, size=5000, seed=0):
+        store = ChunkStore(str(tmp_path / "s"))
+        rng = np.random.default_rng(seed)
+        payloads = [rng.integers(0, 255, size, dtype=np.uint8).tobytes()
+                    for _ in range(n)]
+        payloads[5] = b"\x00" * size
+        pack = store.open_pack("p0")
+        refs = store.put_chunks(pack, payloads)
+        pack.close()
+        return store, refs, payloads
+
+    def test_scatter_into_views(self, tmp_path):
+        store, refs, payloads = self._store(tmp_path)
+        big = np.zeros(sum(r.size for r in refs), dtype=np.uint8)
+        mv = memoryview(big)
+        dests, off = [], 0
+        for r in refs:
+            dests.append((r, mv[off : off + r.size]))
+            off += r.size
+        store.read_batch_into(dests)
+        assert bytes(big.tobytes()) == b"".join(
+            b"\x00" * r.size if r.zero else p for r, p in zip(refs, payloads)
+        )
+
+    def test_duplicate_refs_read_once_replicated(self, tmp_path):
+        store, refs, payloads = self._store(tmp_path)
+        r = refs[0]
+        bufs = [bytearray(r.size) for _ in range(4)]
+        store.read_batch_into([(r, memoryview(b)) for b in bufs])
+        assert all(bytes(b) == payloads[0] for b in bufs)
+
+    def test_wrong_dest_size_raises(self, tmp_path):
+        store, refs, _ = self._store(tmp_path)
+        with pytest.raises(ValueError):
+            store.read_batch_into([(refs[0], memoryview(bytearray(3)))])
+
+    def test_serial_equals_parallel(self, tmp_path):
+        store, refs, payloads = self._store(tmp_path, n=64)
+        out = {}
+        for parallel in (False, True):
+            bufs = [bytearray(r.size) for r in refs]
+            store.read_batch_into(
+                [(r, memoryview(b)) for r, b in zip(refs, bufs)],
+                parallel=parallel,
+            )
+            out[parallel] = [bytes(b) for b in bufs]
+        assert out[False] == out[True]
+
+    def test_read_batch_dedupes_repeats(self, tmp_path):
+        """The same digest requested N times is planned once (seed appended
+        it to by_pack N times) and still returned correctly."""
+        store, refs, payloads = self._store(tmp_path, n=8)
+        batch = store.read_batch(list(refs) * 5)
+        for r, p in zip(refs, payloads):
+            if r.zero:
+                assert r.digest not in batch
+            else:
+                assert batch[r.digest] == p
+
+    def test_scan_chunks_matches_per_chunk(self, tmp_path):
+        rng = np.random.default_rng(3)
+        blob = rng.integers(0, 255, 50000, dtype=np.uint8)
+        blob[10000:20000] = 0
+        buf = memoryview(blob.tobytes())
+        from repro.core.chunkstore import chunk_digest, chunk_payloads, is_zero
+        refs = scan_chunks(buf, 10000)
+        for ref, p in zip(refs, chunk_payloads(buf, 10000)):
+            assert ref.zero == is_zero(p)
+            if not ref.zero:
+                assert ref.digest == chunk_digest(p)
+            assert ref.size == len(p)
+
+
+# --------------------------------------------------------------- properties
+
+ranges_strategy = st.lists(
+    st.tuples(st.integers(0, 1 << 20), st.integers(1, 1 << 16)),
+    min_size=0, max_size=64,
+)
+
+
+class TestCoalesceProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(ranges=ranges_strategy, gap=st.sampled_from([0, 1, 4096, COALESCE_GAP]))
+    def test_runs_cover_partition_and_order(self, ranges, gap):
+        """INVARIANTS of the scatter-read planner:
+        * every input range is a member of exactly one run;
+        * each run covers all its members;
+        * runs are sorted, non-overlapping, and separated by > gap;
+        * within a run, consecutive members (in offset order) are ≤ gap apart.
+        """
+        runs = coalesce_ranges(ranges, gap=gap)
+        seen = []
+        prev_end = None
+        for start, end, members in runs:
+            assert members, "empty run"
+            assert start < end
+            if prev_end is not None:
+                assert start > prev_end + gap  # else they would have merged
+            prev_end = end
+            last_end = None
+            for i in members:
+                off, size = ranges[i]
+                assert start <= off and off + size <= end
+                if last_end is not None:
+                    assert off <= last_end + gap
+                last_end = max(last_end or 0, off + size)
+            assert min(ranges[i][0] for i in members) == start
+            assert max(ranges[i][0] + ranges[i][1] for i in members) == end
+            seen.extend(members)
+        assert sorted(seen) == list(range(len(ranges)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), nzero=st.integers(0, 6))
+    def test_roundtrip_random_store(self, tmp_path_factory, seed, nzero):
+        """INVARIANT: scatter-read returns exactly what was stored, for any
+        mix of zero/non-zero/duplicate chunks."""
+        tmp = tmp_path_factory.mktemp("rb")
+        store = ChunkStore(str(tmp / "s"))
+        rng = np.random.default_rng(seed)
+        payloads = []
+        for i in range(12):
+            if i < nzero:
+                payloads.append(b"\x00" * int(rng.integers(1, 9000)))
+            else:
+                payloads.append(
+                    rng.integers(0, 255, int(rng.integers(1, 9000)),
+                                 dtype=np.uint8).tobytes()
+                )
+        pack = store.open_pack("p")
+        refs = store.put_chunks(pack, payloads)
+        pack.close()
+        order = rng.permutation(len(refs))
+        bufs = {int(i): bytearray(refs[i].size) for i in order}
+        store.read_batch_into([(refs[i], memoryview(bufs[i])) for i in bufs])
+        for i, b in bufs.items():
+            expect = b"\x00" * refs[i].size if refs[i].zero else payloads[i]
+            assert bytes(b) == expect
+
+
+# ------------------------------------------------------------- device patch
+
+class TestDevicePatch:
+    def test_patch_descriptor_matches_host_assembly(self, tmp_path):
+        """Applying (sel, rows) over the pool content must reproduce the
+        host-assembled array — validates the layout fed to the Pallas
+        snapshot_patch kernel."""
+        reg, variant = _registry(tmp_path)
+        inst = reg.cold_start("fn", "snapfaas", engine="planned")
+        ma = inst.arrays["layer2/w"]
+        assert ma.patch is not None
+        meta = ma.meta
+        pool_arr = reg.pools["fam"].get("layer2/w")
+        flat = np.array(pool_arr).reshape(-1).view(np.uint8).copy()
+        rows = ma.patch.rows_2d()
+        cb = meta.chunk_bytes
+        for idx, sel_row in enumerate(ma.patch.sel):
+            if sel_row < 0:
+                continue
+            lo = idx * cb
+            size = min(cb, meta.nbytes - lo)
+            flat[lo : lo + size] = rows[sel_row, :size]
+        patched = flat.view(np.dtype(meta.dtype)).reshape(meta.shape)
+        np.testing.assert_array_equal(patched, variant["layer2"]["w"])
+        # and the host lazy path agrees
+        np.testing.assert_array_equal(inst.value("layer2/w"), patched)
+
+    def test_patch_apply_op_on_descriptor(self, tmp_path):
+        """End-to-end: the jitted patch op over the plan's descriptor equals
+        the variant array (this is exactly what the worker runs on-device)."""
+        import jax.numpy as jnp
+        from repro.kernels.snapshot_patch import patch_apply_op
+
+        reg, variant = _registry(tmp_path)
+        inst = reg.cold_start("fn", "snapfaas", engine="planned")
+        ma = inst.arrays["layer2/w"]
+        meta = ma.meta
+        itemsize = np.dtype(meta.dtype).itemsize
+        c = meta.chunk_bytes // itemsize
+        n = meta.num_chunks()
+        total = meta.nbytes // itemsize
+        base = np.array(reg.pools["fam"].get("layer2/w")).reshape(-1)
+        base = np.pad(base, (0, n * c - total))
+        diff2d = ma.patch.rows_2d().view(np.dtype(meta.dtype))
+        out = patch_apply_op(
+            jnp.asarray(base.reshape(n, c)), jnp.asarray(diff2d),
+            jnp.asarray(ma.patch.sel), mode="replace",
+            interpret=True, use_kernel=False,
+        )
+        got = np.asarray(out).reshape(-1)[:total].reshape(meta.shape)
+        np.testing.assert_array_equal(got, variant["layer2"]["w"])
+
+    def test_worker_serves_patched_params(self, tmp_path):
+        """Worker request path picks the device-patch branch and produces
+        the same logits as a host-assembled instance."""
+        jax = pytest.importorskip("jax")
+        from repro.models import build_model
+        from repro.models.config import ModelConfig
+        from repro.serving.trace import request_tokens
+        from repro.serving.worker import FunctionSpec, Worker
+
+        cfg = ModelConfig(
+            name="t", family="dense", num_layers=2, d_model=64, num_heads=2,
+            num_kv_heads=2, d_ff=128, vocab_size=256, tie_embeddings=True,
+            dtype="float32",
+        )
+        model = build_model(cfg)
+        worker = Worker(str(tmp_path / "w"), chunk_bytes=4096)
+        base_params = model.init(0)
+        worker.register_runtime("t", model, base_params)
+        flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
+        variant = {k: np.array(v) for k, v in flat.items()}
+        for k in variant:
+            if k.endswith("wq"):
+                variant[k] = variant[k] + 0.01
+        spec = FunctionSpec(name="fn", family="t", variant=variant)
+        worker.register_function(spec)
+        toks = request_tokens(spec, np.random.default_rng(0), cfg.vocab_size,
+                              seq=8)
+        r_planned = worker.handle("fn", toks, strategy="snapfaas",
+                                  force_cold=True)
+        inst = worker.pool.get("fn")
+        assert any(a._dev is not None for a in inst.arrays.values()), \
+            "device patch path did not fire"
+        import os
+        os.environ["REPRO_RESTORE_ENGINE"] = "legacy"
+        try:
+            r_legacy = worker.handle("fn", toks, strategy="snapfaas",
+                                     force_cold=True)
+        finally:
+            del os.environ["REPRO_RESTORE_ENGINE"]
+        np.testing.assert_allclose(r_planned.output, r_legacy.output,
+                                   rtol=1e-5, atol=1e-6)
