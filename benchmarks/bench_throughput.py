@@ -12,6 +12,7 @@ from typing import List
 import numpy as np
 
 from .common import build_suite, cold_request, csv_row
+from repro.serving import InvocationRequest
 from repro.serving.trace import request_tokens
 
 
@@ -26,7 +27,7 @@ def run(root: str | None = None) -> List[str]:
         rs = [cold_request(worker, spec, strategy, seed=s) for s in range(3)]
         lat_cold[strategy] = float(np.median([r.latency_s for r in rs]))
     toks = request_tokens(spec, np.random.default_rng(0), 16384)
-    warm = worker.handle(spec.name, toks, strategy="snapfaas")
+    warm = worker.invoke(InvocationRequest(function=spec.name, tokens=toks))
     lat_warm = warm.latency_s
 
     inst_mb = sum(a.meta.nbytes for a in

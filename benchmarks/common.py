@@ -24,6 +24,7 @@ import numpy as np
 from repro.core.snapshot import flatten_pytree
 from repro.models import build_model
 from repro.models.config import ModelConfig
+from repro.serving.api import ColdStartOptions, InvocationRequest, Strategy
 from repro.serving.trace import request_tokens
 from repro.serving.worker import FunctionSpec, Worker
 
@@ -120,8 +121,11 @@ def cold_request(worker: Worker, spec, strategy: str, *, drop_cache: bool = True
     toks = request_tokens(spec, np.random.default_rng(seed),
                           BENCH_CFG.vocab_size, batch=1,
                           seq=getattr(spec, "exec_seq", 32))
-    return worker.handle(spec.name, toks, strategy=strategy, force_cold=True,
-                         engine=engine)
+    return worker.invoke(InvocationRequest(
+        function=spec.name, tokens=toks,
+        options=ColdStartOptions(strategy=Strategy.coerce(strategy),
+                                 force_cold=True, engine=engine),
+    ))
 
 
 def rounds(worker: Worker, spec, strategy: str, n: int = 5, warmup: int = 1,

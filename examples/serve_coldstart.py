@@ -1,5 +1,6 @@
-"""Serve a small model with batched requests under every cold-start
-strategy; print the Fig.5-style comparison.
+"""Serve a small model through the multi-worker cluster under every
+cold-start strategy (including the planner-driven ``auto``); print the
+Fig.5-style comparison and the fleet metrics.
 
 Run:  PYTHONPATH=src python examples/serve_coldstart.py
 """
@@ -7,16 +8,43 @@ Run:  PYTHONPATH=src python examples/serve_coldstart.py
 import json
 import tempfile
 
+import numpy as np
+
 from repro.configs import get_config, reduced
 from repro.models import build_model
-from repro.serving.trace import build_functions, replay_trace, summarize
+from repro.serving import (
+    ColdStartOptions,
+    InvocationRequest,
+    Strategy,
+    build_cluster,
+    replay_cluster_trace,
+    summarize,
+)
 
 root = tempfile.mkdtemp(prefix="serve_example_")
 cfg = reduced(get_config("gemma-2b"))
 model = build_model(cfg)
-worker, fns = build_functions(root, cfg, model, n_functions=4)
+cluster, fns = build_cluster(root, cfg, model, n_workers=2, n_functions=4)
 
-for strategy in ("regular", "reap", "seuss", "snapfaas-", "snapfaas"):
-    results = replay_trace(worker, fns, n_requests=16, cold_fraction=0.5,
-                           strategy=strategy, seed=0)
-    print(json.dumps(summarize(strategy, results)))
+with cluster:
+    # one typed invocation, end to end
+    req = InvocationRequest(
+        function=fns[0].name,
+        tokens=np.zeros((1, 8), np.int32),
+        options=ColdStartOptions(strategy=Strategy.AUTO),
+    )
+    result = cluster.submit(req).result()
+    print(f"{result.function}: cold={result.cold} "
+          f"requested={result.requested} ran={result.strategy} "
+          f"boot={result.boot_s*1e3:.1f}ms exec={result.exec_s*1e3:.1f}ms "
+          f"worker={result.worker_id}")
+
+    # the full strategy comparison over a replayed trace
+    for strategy in Strategy:
+        results = replay_cluster_trace(
+            cluster, fns, n_requests=16, cold_fraction=0.5,
+            strategy=strategy, seed=0,
+        )
+        print(json.dumps(summarize(strategy, results)))
+
+    print(json.dumps({"fleet": cluster.metrics()["pool"]}))

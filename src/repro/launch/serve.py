@@ -1,26 +1,28 @@
-"""End-to-end serving driver: cold-start strategies under a request trace.
+"""End-to-end serving driver: cold-start strategies under a request trace,
+scheduled across a multi-worker cluster.
 
     PYTHONPATH=src python -m repro.launch.serve --family gemma-2b \
-        --functions 6 --requests 40 --cold-fraction 0.5
+        --functions 6 --requests 40 --cold-fraction 0.5 \
+        --strategies auto --workers 4
 
-Boots a worker (zygote registry + instance pool), registers N function
-variants of the family's reduced config, replays a request trace with the
-given cold fraction for every strategy, and prints the paper-style
-boot/exec/e2e comparison (Fig. 5 on live hardware — this container).
+Boots a :class:`~repro.serving.cluster.Cluster` (N workers, each with a
+zygote registry + policy-driven instance pool), registers function variants
+of the family's reduced config (sharded across workers), replays a request
+trace concurrently for every strategy — including ``auto``, where the
+Eq. 1 planner picks the cheapest strategy per function — and prints the
+paper-style boot/exec/e2e comparison plus the fleet metrics.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import tempfile
-
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import build_model
-from repro.serving.trace import build_functions, replay_trace, summarize
+from repro.serving import Strategy, build_cluster, make_policy, replay_cluster_trace, summarize
+from repro.serving.policy import POLICIES
 
 
 def main() -> None:
@@ -30,7 +32,13 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--cold-fraction", type=float, default=0.5)
     ap.add_argument("--strategies", nargs="*",
-                    default=["regular", "reap", "seuss", "snapfaas-", "snapfaas"])
+                    default=["regular", "reap", "seuss", "snapfaas-",
+                             "snapfaas", "auto"],
+                    choices=[s.value for s in Strategy])
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--policy", default="lru", choices=sorted(POLICIES))
+    ap.add_argument("--zipf-alpha", type=float, default=None,
+                    help="skew the trace (Zipf exponent); default round-robin")
     ap.add_argument("--root", default=None)
     args = ap.parse_args()
 
@@ -38,22 +46,29 @@ def main() -> None:
     cfg = reduced(get_config(args.family))
     model = build_model(cfg)
 
-    worker, fns = build_functions(root, cfg, model, n_functions=args.functions)
+    cluster, fns = build_cluster(
+        root, cfg, model, n_workers=args.workers, n_functions=args.functions,
+        policy_factory=lambda: make_policy(args.policy),
+    )
     rows = []
-    for strat in args.strategies:
-        results = replay_trace(
-            worker, fns, n_requests=args.requests,
-            cold_fraction=args.cold_fraction, strategy=strat, seed=1,
-        )
-        rows.append(summarize(strat, results))
+    with cluster:
+        for strat in args.strategies:
+            results = replay_cluster_trace(
+                cluster, fns, n_requests=args.requests,
+                cold_fraction=args.cold_fraction, strategy=strat, seed=1,
+                alpha=args.zipf_alpha,
+            )
+            rows.append(summarize(strat, results))
+        fleet = cluster.metrics()
     print(json.dumps(rows, indent=1))
+    print(json.dumps({"fleet": fleet}, indent=1))
     base = {r["strategy"]: r for r in rows}
-    if "snapfaas" in base and "reap" in base:
-        sp = base["reap"]["cold_e2e_ms"] / max(base["snapfaas"]["cold_e2e_ms"], 1e-9)
-        print(f"snapfaas speedup over reap (cold e2e): {sp:.2f}x")
-    if "snapfaas" in base and "seuss" in base:
-        sp = base["seuss"]["cold_e2e_ms"] / max(base["snapfaas"]["cold_e2e_ms"], 1e-9)
-        print(f"snapfaas speedup over seuss (cold e2e): {sp:.2f}x")
+    for other in ("reap", "seuss"):
+        if "snapfaas" in base and other in base:
+            sp = base[other]["cold_e2e_ms"] / max(base["snapfaas"]["cold_e2e_ms"], 1e-9)
+            print(f"snapfaas speedup over {other} (cold e2e): {sp:.2f}x")
+    if "auto" in base and base["auto"].get("resolved"):
+        print(f"auto resolved to: {base['auto']['resolved']}")
 
 
 if __name__ == "__main__":

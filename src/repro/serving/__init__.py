@@ -1,2 +1,37 @@
-from .worker import FunctionSpec, InstancePool, RequestResult, Worker
-from .trace import build_functions, replay_trace, summarize
+from .api import (
+    ColdStartOptions,
+    InvocationRequest,
+    InvocationResult,
+    NpzSourceResolver,
+    SourceResolver,
+    Strategy,
+    select_strategy,
+)
+from .policy import (
+    GDSFPolicy,
+    InstancePool,
+    LRUPolicy,
+    PoolPolicy,
+    TTLPolicy,
+    make_policy,
+)
+from .cluster import Cluster
+from .worker import FunctionSpec, RequestResult, Worker
+from .trace import (
+    build_cluster,
+    build_functions,
+    make_requests,
+    replay_cluster_trace,
+    replay_trace,
+    summarize,
+    zipf_schedule,
+)
+
+__all__ = [
+    "Cluster", "ColdStartOptions", "FunctionSpec", "GDSFPolicy",
+    "InstancePool", "InvocationRequest", "InvocationResult", "LRUPolicy",
+    "NpzSourceResolver", "PoolPolicy", "RequestResult", "SourceResolver",
+    "Strategy", "TTLPolicy", "Worker", "build_cluster", "build_functions",
+    "make_policy", "make_requests", "replay_cluster_trace", "replay_trace",
+    "select_strategy", "summarize", "zipf_schedule",
+]

@@ -1,0 +1,200 @@
+"""Multi-worker scheduler: the paper's fleet view of cold starts.
+
+A :class:`Cluster` shards registered functions across N :class:`Worker`\\ s
+(stable hashing — a function's snapshots, working sets and warm instances
+live on exactly one worker), runs invocations concurrently on an executor,
+and serialises concurrent cold starts of the *same* function behind a
+per-function single-flight lock (the second request rides the first boot's
+warm instance instead of duplicating the restore I/O).
+
+``submit`` returns a ``Future[InvocationResult]``; ``replay`` drives a
+whole request trace through the executor and ``metrics`` aggregates the
+fleet view (per-worker pool stats, cold/warm counts, queue delay) that the
+Fig. 7 memory/throughput analysis needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.planner import PAPER_C220G5, StorageModel
+from repro.models import Model
+from repro.serving.api import InvocationRequest, InvocationResult
+from repro.serving.policy import PoolPolicy
+from repro.serving.worker import FunctionSpec, Worker
+
+
+def _shard_of(name: str, n: int) -> int:
+    """Stable function → worker assignment (survives process restarts)."""
+    h = hashlib.blake2b(name.encode(), digest_size=8).digest()
+    return int.from_bytes(h, "little") % n
+
+
+class Cluster:
+    """N workers + an invocation scheduler.
+
+    ``policy_factory`` builds one fresh :class:`PoolPolicy` per worker
+    (policies hold per-worker state, so sharing one instance is wrong);
+    ``None`` keeps each worker's LRU default.
+    """
+
+    def __init__(
+        self,
+        root: str,
+        *,
+        n_workers: int = 2,
+        pool_budget_bytes: int = 1 << 30,
+        chunk_bytes: int = 64 * 1024,
+        policy_factory: Optional[Callable[[], PoolPolicy]] = None,
+        storage: StorageModel = PAPER_C220G5,
+        max_concurrency: Optional[int] = None,
+    ):
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+        self.workers = [
+            Worker(
+                os.path.join(root, f"worker{i}"),
+                pool_budget_bytes=pool_budget_bytes,
+                chunk_bytes=chunk_bytes,
+                pool_policy=policy_factory() if policy_factory else None,
+                storage=storage,
+                worker_id=i,
+            )
+            for i in range(n_workers)
+        ]
+        self._executor = ThreadPoolExecutor(
+            max_workers=max_concurrency or min(32, 4 * n_workers),
+            thread_name_prefix="cluster",
+        )
+        self._flight: Dict[str, threading.Lock] = {}
+        self._flight_guard = threading.Lock()
+        self._results_lock = threading.Lock()
+        self.n_requests = 0
+        self.n_cold = 0
+        self.queue_s_total = 0.0
+
+    # -- registration (broadcast runtimes, shard functions) -------------------
+
+    def register_runtime(self, family: str, model: Model, base_params) -> None:
+        """Cluster-manager replication: every worker gets the family's base
+        snapshot and jitted step (paper Fig. 4 bootstrap)."""
+        for w in self.workers:
+            w.register_runtime(family, model, base_params)
+
+    def register_function(self, spec: FunctionSpec) -> Worker:
+        """Register ``spec`` on its home shard; returns the owning worker."""
+        w = self.worker_for(spec.name)
+        w.register_function(spec)
+        return w
+
+    def worker_for(self, fn: str) -> Worker:
+        return self.workers[_shard_of(fn, len(self.workers))]
+
+    # -- invocation -----------------------------------------------------------
+
+    def _flight_lock(self, fn: str) -> threading.Lock:
+        with self._flight_guard:
+            lock = self._flight.get(fn)
+            if lock is None:
+                lock = self._flight[fn] = threading.Lock()
+            return lock
+
+    def _run(self, request: InvocationRequest, submitted: float) -> InvocationResult:
+        worker = self.worker_for(request.function)
+        # single-flight: concurrent requests to one function serialise, so
+        # at most one cold start per function is in flight; followers hit
+        # the warm instance the leader just pooled.
+        with self._flight_lock(request.function):
+            # queue_s = executor wait + single-flight wait: a follower
+            # blocked behind a leader's cold boot reports that time here,
+            # not as a suspiciously instant warm latency_s
+            queue_s = time.perf_counter() - submitted
+            result = worker.invoke(request)
+        result = dataclasses.replace(result, queue_s=queue_s)
+        with self._results_lock:
+            self.n_requests += 1
+            self.n_cold += int(result.cold)
+            self.queue_s_total += queue_s
+        return result
+
+    def submit(self, request: InvocationRequest) -> "Future[InvocationResult]":
+        """Schedule one invocation; returns a Future of the typed result."""
+        return self._executor.submit(self._run, request, time.perf_counter())
+
+    def invoke(self, request: InvocationRequest) -> InvocationResult:
+        """Synchronous convenience over :meth:`submit`."""
+        return self.submit(request).result()
+
+    # -- trace replay ---------------------------------------------------------
+
+    def replay(
+        self, requests: Iterable[InvocationRequest], *,
+        max_inflight: Optional[int] = None,
+    ) -> List[InvocationResult]:
+        """Drive a request trace through the scheduler concurrently,
+        preserving result order.  ``max_inflight`` bounds how far the driver
+        runs ahead of completions (an open-loop arrival cap)."""
+        requests = list(requests)
+        results: List[Optional[InvocationResult]] = [None] * len(requests)
+        window = max_inflight or len(requests) or 1
+        inflight: List[tuple] = []
+        for i, req in enumerate(requests):
+            if len(inflight) >= window:
+                j, fut = inflight.pop(0)
+                results[j] = fut.result()
+            inflight.append((i, self.submit(req)))
+        for j, fut in inflight:
+            results[j] = fut.result()
+        return results  # type: ignore[return-value]
+
+    # -- fleet metrics ---------------------------------------------------------
+
+    def metrics(self) -> Dict:
+        per_worker = []
+        for w in self.workers:
+            per_worker.append({
+                "worker_id": w.worker_id,
+                "functions": sorted(w.specs),
+                "pool": w.pool.stats(),
+            })
+        pools = [w.pool for w in self.workers]
+        hits = sum(p.hits for p in pools)
+        misses = sum(p.misses for p in pools)
+        with self._results_lock:
+            n_req, n_cold = self.n_requests, self.n_cold
+            queue_total = self.queue_s_total
+        return {
+            "n_workers": len(self.workers),
+            "n_requests": n_req,
+            "n_cold": n_cold,
+            "cold_fraction": round(n_cold / n_req, 4) if n_req else 0.0,
+            "mean_queue_ms": round(queue_total / n_req * 1e3, 3) if n_req else 0.0,
+            "pool": {
+                "hits": hits,
+                "misses": misses,
+                "evictions": sum(p.evictions for p in pools),
+                "rejections": sum(p.rejections for p in pools),
+                "used_bytes": sum(p.used for p in pools),
+                "budget_bytes": sum(p.budget for p in pools),
+                "warm_hit_rate": round(hits / (hits + misses), 4)
+                                 if hits + misses else 0.0,
+            },
+            "per_worker": per_worker,
+        }
+
+    def shutdown(self) -> None:
+        self._executor.shutdown(wait=True)
+
+    def __enter__(self) -> "Cluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

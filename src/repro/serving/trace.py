@@ -8,30 +8,33 @@ runtime family with different dependency footprints —
 * *head* functions replace the full unembedding/head (mid diffs);
 * *fine-tune* functions modify every block (large diffs, the
   ``sentiment-analysis``-class heavy functions).
+
+Traces are sequences of :class:`InvocationRequest`; ``zipf_schedule``
+produces the skewed popularity the warm-pool policy comparison needs
+(FaaS invocation popularity is heavy-tailed — Shahrad et al. 2020).
 """
 
 from __future__ import annotations
 
 import os
-from typing import Dict, List, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.snapshot import flatten_pytree
 from repro.models import Model
-from repro.serving.worker import FunctionSpec, RequestResult, Worker
+from repro.serving.api import ColdStartOptions, InvocationRequest, InvocationResult, Strategy
+from repro.serving.cluster import Cluster
+from repro.serving.worker import FunctionSpec, Worker
 
 import jax
 
 
-def build_functions(
-    root: str, cfg, model: Model, *, n_functions: int = 4, seed: int = 0,
-) -> Tuple[Worker, List[FunctionSpec]]:
-    worker = Worker(os.path.join(root, "worker"))
-    base_params = model.init(seed)
-    worker.register_runtime(cfg.name, model, base_params)
-    base_flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
-
+def build_specs(
+    root: str, cfg, base_flat: Dict[str, np.ndarray], *,
+    n_functions: int = 4, seed: int = 0,
+) -> List[FunctionSpec]:
+    """Paper-style function variants over a family base (not yet registered)."""
     rng = np.random.default_rng(seed + 1)
     specs: List[FunctionSpec] = []
     kinds = ["adapter", "head", "finetune"]
@@ -59,13 +62,42 @@ def build_functions(
         src = os.path.join(src_dir, f"fn{i}.npz")
         np.savez(src, **{k: v for k, v in variant.items()
                          if not np.array_equal(v, base_flat[k])})
-        spec = FunctionSpec(
+        specs.append(FunctionSpec(
             name=f"fn{i}-{kind}", family=cfg.name, variant=variant,
             touched=None, touched_rows=touched_rows, source_path=src,
-        )
+        ))
+    return specs
+
+
+def build_functions(
+    root: str, cfg, model: Model, *, n_functions: int = 4, seed: int = 0,
+) -> Tuple[Worker, List[FunctionSpec]]:
+    """Single-worker suite (legacy bench path and unit tests)."""
+    worker = Worker(os.path.join(root, "worker"))
+    base_params = model.init(seed)
+    worker.register_runtime(cfg.name, model, base_params)
+    base_flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
+    specs = build_specs(root, cfg, base_flat, n_functions=n_functions, seed=seed)
+    for spec in specs:
         worker.register_function(spec)
-        specs.append(spec)
     return worker, specs
+
+
+def build_cluster(
+    root: str, cfg, model: Model, *, n_workers: int = 2, n_functions: int = 4,
+    seed: int = 0, **cluster_kw,
+) -> Tuple[Cluster, List[FunctionSpec]]:
+    """Multi-worker suite: runtime broadcast to every worker, functions
+    sharded by stable hash."""
+    cluster = Cluster(os.path.join(root, "cluster"), n_workers=n_workers,
+                      **cluster_kw)
+    base_params = model.init(seed)
+    cluster.register_runtime(cfg.name, model, base_params)
+    base_flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
+    specs = build_specs(root, cfg, base_flat, n_functions=n_functions, seed=seed)
+    for spec in specs:
+        cluster.register_function(spec)
+    return cluster, specs
 
 
 def request_tokens(spec: FunctionSpec, rng: np.random.Generator, vocab: int,
@@ -76,34 +108,87 @@ def request_tokens(spec: FunctionSpec, rng: np.random.Generator, vocab: int,
     return rng.integers(0, vocab, size=(batch, seq), dtype=np.int32)
 
 
+def zipf_schedule(
+    n_requests: int, n_functions: int, *, alpha: float = 1.1, seed: int = 0,
+) -> np.ndarray:
+    """Function indices for a skewed trace: P(i) ∝ (i+1)^-alpha (index 0 is
+    the most popular)."""
+    w = (np.arange(1, n_functions + 1, dtype=np.float64)) ** -alpha
+    w /= w.sum()
+    rng = np.random.default_rng(seed)
+    return rng.choice(n_functions, size=n_requests, p=w)
+
+
+def make_requests(
+    specs: Sequence[FunctionSpec], schedule: Sequence[int], vocab: int, *,
+    strategy: "Strategy | str" = Strategy.SNAPFAAS, cold_fraction: float = 0.0,
+    seed: int = 0, seq: int = 32,
+) -> Iterator[InvocationRequest]:
+    """Turn a schedule (sequence of function indices) into typed requests."""
+    rng = np.random.default_rng(seed)
+    strategy = Strategy.coerce(strategy)
+    for idx in schedule:
+        spec = specs[idx]
+        yield InvocationRequest(
+            function=spec.name,
+            tokens=request_tokens(spec, rng, vocab, seq=seq),
+            options=ColdStartOptions(
+                strategy=strategy,
+                force_cold=bool(rng.random() < cold_fraction),
+            ),
+        )
+
+
 def replay_trace(
     worker: Worker, specs: List[FunctionSpec], *, n_requests: int,
-    cold_fraction: float, strategy: str, seed: int = 0,
-) -> List[RequestResult]:
-    rng = np.random.default_rng(seed)
+    cold_fraction: float, strategy: "Strategy | str", seed: int = 0,
+) -> List[InvocationResult]:
+    """Round-robin trace on a single worker (synchronous)."""
+    schedule = [i % len(specs) for i in range(n_requests)]
     vocab = worker.models[specs[0].family].cfg.vocab_size
-    results = []
-    for i in range(n_requests):
-        spec = specs[i % len(specs)]
-        toks = request_tokens(spec, rng, vocab)
-        force_cold = bool(rng.random() < cold_fraction)
-        results.append(worker.handle(spec.name, toks, strategy=strategy,
-                                     force_cold=force_cold))
-    return results
+    return [worker.invoke(req) for req in make_requests(
+        specs, schedule, vocab, strategy=strategy,
+        cold_fraction=cold_fraction, seed=seed,
+    )]
 
 
-def summarize(strategy: str, results: List[RequestResult]) -> Dict:
+def replay_cluster_trace(
+    cluster: Cluster, specs: List[FunctionSpec], *, n_requests: int,
+    cold_fraction: float, strategy: "Strategy | str", seed: int = 0,
+    alpha: Optional[float] = None, max_inflight: Optional[int] = None,
+) -> List[InvocationResult]:
+    """Concurrent trace through the cluster scheduler; ``alpha`` switches
+    from round-robin to Zipf-skewed popularity."""
+    if alpha is None:
+        schedule = [i % len(specs) for i in range(n_requests)]
+    else:
+        schedule = zipf_schedule(n_requests, len(specs), alpha=alpha, seed=seed)
+    vocab = cluster.workers[0].models[specs[0].family].cfg.vocab_size
+    return cluster.replay(
+        make_requests(specs, schedule, vocab, strategy=strategy,
+                      cold_fraction=cold_fraction, seed=seed),
+        max_inflight=max_inflight,
+    )
+
+
+def summarize(strategy: "Strategy | str", results: List[InvocationResult]) -> Dict:
     cold = [r for r in results if r.cold]
     warm = [r for r in results if not r.cold]
     ms = lambda xs: round(float(np.mean(xs)) * 1e3, 3) if xs else None
     out = {
-        "strategy": strategy,
+        "strategy": str(Strategy.coerce(strategy)),
         "n_cold": len(cold), "n_warm": len(warm),
         "cold_boot_ms": ms([r.boot_s for r in cold]),
         "cold_exec_ms": ms([r.exec_s for r in cold]),
         "cold_e2e_ms": ms([r.latency_s for r in cold]),
         "warm_e2e_ms": ms([r.latency_s for r in warm]),
     }
+    resolved = sorted({str(r.strategy) for r in cold})
+    if resolved and resolved != [out["strategy"]]:
+        out["resolved"] = resolved  # AUTO: what the planner actually picked
+    unpooled = sum(1 for r in results if not r.pooled)
+    if unpooled:
+        out["unpooled"] = unpooled  # instances the warm pool rejected
     mets = [r.metrics for r in cold if r.metrics is not None]
     if mets:
         out.update(

@@ -4,28 +4,44 @@ A *function* is a registered model variant (fine-tune / new head / adapter
 merge) of a runtime *family* (architecture).  A request either hits a warm
 instance (instance pool) or triggers a cold start through the snapshot
 engine with the configured strategy (regular / reap / seuss / snapfaas− /
-snapfaas).  Execution runs the family's jitted step(s) on the restored
-params — demand-paged leaves materialize the moment the request path first
-touches them, exactly like REAP's runtime page faults.
+snapfaas / auto).  Execution runs the family's jitted step(s) on the
+restored params — demand-paged leaves materialize the moment the request
+path first touches them, exactly like REAP's runtime page faults.
+
+The request path is typed (``Worker.invoke(InvocationRequest)``); the
+legacy string-typed ``Worker.handle(fn, tokens, strategy=..., ...)`` is a
+deprecation shim for one release (see DESIGN.md migration notes).
 """
 
 from __future__ import annotations
 
 import os
+import threading
 import time
-from collections import OrderedDict
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AccessLog, ColdStartMetrics, RestoredInstance, ZygoteRegistry
+from repro.core.planner import PAPER_C220G5, StorageModel
 from repro.core.restore import MaterializedArray
 from repro.core.snapshot import flatten_pytree, resolve
 from repro.kernels.snapshot_patch import patch_apply_op
 from repro.models import Batch, Model
+from repro.serving.api import (
+    ColdStartOptions,
+    InvocationRequest,
+    InvocationResult,
+    NpzSourceResolver,
+    SourceResolver,
+    Strategy,
+    select_strategy,
+)
+from repro.serving.policy import InstancePool, PoolPolicy
 
 PyTree = Any
 
@@ -33,7 +49,8 @@ PyTree = Any
 @dataclass
 class FunctionSpec:
     """What the developer 'uploads' (paper Fig. 3): variant params + which
-    leaves its requests touch (handler signature)."""
+    leaves its requests touch (handler signature) + a declared resolver for
+    its source artifacts (``seuss``/``regular`` boot path)."""
 
     name: str
     family: str
@@ -41,60 +58,37 @@ class FunctionSpec:
     touched: Optional[List[str]] = None     # leaves a request reads (None=all)
     touched_rows: Dict[str, List[int]] = field(default_factory=dict)
     source_path: str = ""
+    resolver: Optional[SourceResolver] = None  # default: NpzSourceResolver
 
 
-@dataclass
-class RequestResult:
-    function: str
-    cold: bool
-    strategy: str
-    latency_s: float
-    boot_s: float
-    exec_s: float
-    metrics: Optional[ColdStartMetrics]
-    output: Any = None
-
-
-class InstancePool:
-    """Warm instances with LRU eviction under a memory budget (the paper's
-    keep-warm grace behaviour; Fig. 7's memory/throughput trade)."""
-
-    def __init__(self, budget_bytes: int):
-        self.budget = budget_bytes
-        self._pool: "OrderedDict[str, Tuple[RestoredInstance, int]]" = OrderedDict()
-        self.used = 0
-
-    def get(self, fn: str) -> Optional[RestoredInstance]:
-        item = self._pool.pop(fn, None)
-        if item is None:
-            return None
-        self._pool[fn] = item  # refresh LRU
-        return item[0]
-
-    def put(self, fn: str, inst: RestoredInstance, nbytes: int) -> None:
-        while self.used + nbytes > self.budget and self._pool:
-            _, (_, nb) = self._pool.popitem(last=False)
-            self.used -= nb
-        if self.used + nbytes <= self.budget:
-            self._pool[fn] = (inst, nbytes)
-            self.used += nbytes
-
-    def drop(self, fn: str) -> None:
-        item = self._pool.pop(fn, None)
-        if item is not None:
-            self.used -= item[1]
+#: deprecated alias — results are InvocationResult now (same field names
+#: plus ``requested``/``queue_s``/``pooled``/``worker_id``)
+RequestResult = InvocationResult
 
 
 class Worker:
     """One worker machine: zygote registry + instance pool + jitted families."""
 
     def __init__(self, root: str, *, pool_budget_bytes: int = 1 << 30,
-                 chunk_bytes: int = 64 * 1024):
+                 chunk_bytes: int = 64 * 1024,
+                 pool_policy: Optional[PoolPolicy] = None,
+                 storage: StorageModel = PAPER_C220G5,
+                 worker_id: int = 0):
         self.registry = ZygoteRegistry(root, chunk_bytes=chunk_bytes)
-        self.pool = InstancePool(pool_budget_bytes)
+        self.pool = InstancePool(pool_budget_bytes, policy=pool_policy)
+        self.storage = storage              # deployment tier for Eq. 1 (AUTO)
+        self.worker_id = worker_id
         self.models: Dict[str, Model] = {}
         self.specs: Dict[str, FunctionSpec] = {}
-        self._fwd: Dict[str, Callable] = {}
+        self._fwd: Dict[str, callable] = {}
+        # device-ready base pools / on-disk base images, per family.  Eagerly
+        # initialised: the former getattr-lazy init raced register_function
+        # against register_runtime (latent AttributeError).
+        self._pool_dev: Dict[str, Dict[str, jax.Array]] = {}
+        self._base_npz: Dict[str, str] = {}
+        # Eq. 1 resolution cache for Strategy.AUTO: fn → (strategy, predictions)
+        self._auto: Dict[str, Any] = {}
+        self._lock = threading.RLock()
 
     # -- bootstrap (cluster-manager replication step) -------------------------
 
@@ -108,12 +102,10 @@ class Worker:
         # served zero-copy to every instance of the family — the runtime
         # analogue of the paper's mmap'd in-RAM base snapshot.
         pool = self.registry.pools[family]
-        self._pool_dev = getattr(self, "_pool_dev", {})
         self._pool_dev[family] = {
             p: jnp.asarray(pool.get(p)) for p in self.registry.bases[family].arrays
         }
         # on-disk base image: what `regular` boots from (kernel+rootfs analog)
-        self._base_npz = getattr(self, "_base_npz", {})
         base_path = os.path.join(self.registry.root, f"base-{family}.npz")
         np.savez(base_path, **{k.replace("/", "|"): v for k, v in flat.items()})
         self._base_npz[family] = base_path
@@ -122,9 +114,11 @@ class Worker:
 
     def register_function(self, spec: FunctionSpec) -> None:
         self.specs[spec.name] = spec
-        self.registry.register_function(
+        rec = self.registry.register_function(
             spec.name, spec.family, spec.variant, source_path=spec.source_path
         )
+        if spec.resolver is None:
+            spec.resolver = self._default_resolver(spec)
         # mock invocation under access tracking → WS files (paper Fig. 4)
         log = AccessLog()
         for path in (spec.touched if spec.touched is not None else spec.variant):
@@ -132,6 +126,71 @@ class Worker:
         for path, rows in spec.touched_rows.items():
             log.touch_rows(path, rows)
         self.registry.generate_working_set(spec.name, log)
+        # measure function-import compute once (SEUSS's memoized C term):
+        # the planner's seuss/regular predictions are garbage without it.
+        # Drop the artifact's page cache first — registration just wrote it,
+        # and a cache-warm read would understate the cold import cost the
+        # planner is modelling.
+        if spec.source_path and os.path.exists(spec.source_path):
+            fd = os.open(spec.source_path, os.O_RDONLY)
+            try:
+                os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+            except (AttributeError, OSError):
+                pass
+            finally:
+                os.close(fd)
+        t0 = time.perf_counter()
+        spec.resolver.load_source()
+        rec.init_compute_s = time.perf_counter() - t0
+        # precompute the Eq. 1 table here, NOT on the first request — the
+        # request path must never pay a planning pass inside its timed window
+        with self._lock:
+            self._auto.pop(spec.name, None)
+        self._auto_entry(spec.name)
+
+    def _default_resolver(self, spec: FunctionSpec) -> NpzSourceResolver:
+        pool = self.registry.pools[spec.family]
+        base = self.registry.bases[spec.family]
+        return NpzSourceResolver(
+            source_path=spec.source_path,
+            base_path=self._base_npz.get(spec.family, ""),
+            source_fallback=lambda: {k: np.array(v)
+                                     for k, v in spec.variant.items()},
+            base_fallback=lambda: {p: np.array(pool.get(p))
+                                   for p in base.arrays},
+        )
+
+    # -- planner glue (Strategy.AUTO) ----------------------------------------
+
+    def _auto_entry(self, fn: str):
+        """Cached (ws, best strategy, prediction table) for ``fn``; rebuilt
+        whenever the registry's working set object changed (e.g. a direct
+        ``generate_working_set`` call — the registry clears its restore
+        plans for the same reason)."""
+        rec = self.registry.functions[fn]
+        with self._lock:
+            entry = self._auto.get(fn)
+            if entry is None or entry[0] is not rec.ws:
+                best, preds = select_strategy(self.registry.sizes(fn),
+                                              self.storage)
+                entry = (rec.ws, best, preds)
+                self._auto[fn] = entry
+            return entry
+
+    def resolve_strategy(self, fn: str, strategy: "Strategy | str") -> Strategy:
+        """Concrete strategy for this request.  AUTO = the Eq. 1 argmin over
+        the function's measured SnapshotSizes and this worker's StorageModel,
+        cached per function until its working set changes."""
+        s = Strategy.coerce(strategy)
+        if s is not Strategy.AUTO:
+            return s
+        return self._auto_entry(fn)[1]
+
+    def predicted_cost(self, fn: str, strategy: Strategy) -> float:
+        """Predicted re-cold-start latency (s) — the GDSF residency cost."""
+        _, best, preds = self._auto_entry(fn)
+        pred = preds.get(Strategy.coerce(strategy))
+        return pred.total if pred is not None else preds[best].total
 
     # -- request path --------------------------------------------------------------
 
@@ -152,8 +211,7 @@ class Worker:
             return None
         if ma._dev is not None:
             return ma._dev
-        pool_dev = getattr(self, "_pool_dev", {}).get(family, {})
-        base_dev = pool_dev.get(path)
+        base_dev = self._pool_dev.get(family, {}).get(path)
         if base_dev is None:
             return None
         meta = ma.meta
@@ -193,7 +251,7 @@ class Worker:
         for k, v in (request_rows or {}).items():
             rows[k] = np.union1d(np.asarray(rows.get(k, []), np.int64), v)
 
-        pool_dev = getattr(self, "_pool_dev", {}).get(spec.family, {})
+        pool_dev = self._pool_dev.get(spec.family, {})
 
         def rec(t, prefix):
             if isinstance(t, dict):
@@ -213,26 +271,23 @@ class Worker:
 
         return rec(template, "")
 
-    def handle(
-        self,
-        fn: str,
-        tokens: np.ndarray,
-        *,
-        strategy: str = "snapfaas",
-        force_cold: bool = False,
-        engine: Optional[str] = None,
-    ) -> RequestResult:
+    def invoke(self, request: InvocationRequest) -> InvocationResult:
+        """Typed request path: warm-pool lookup, cold start (with AUTO
+        resolved through the planner), execution, pool re-admission."""
+        fn = request.function
+        opts = request.options
         spec = self.specs[fn]
+        strategy = self.resolve_strategy(fn, opts.strategy)
         t0 = time.perf_counter()
-        inst = None if force_cold else self.pool.get(fn)
+        inst = None if opts.force_cold else self.pool.get(fn)
         cold = inst is None
         if cold:
             self.pool.drop(fn)
             loaders = self._loaders(spec)
             inst = self.registry.cold_start(
-                fn, strategy,
+                fn, strategy.value,
                 residual_init=lambda ds: {**ds, "kv_ready": True},
-                engine=engine,
+                engine=opts.engine,
                 **loaders,
             )
         boot = time.perf_counter() - t0
@@ -240,9 +295,9 @@ class Worker:
         te = time.perf_counter()
         req_rows = {}
         if "embed/table" in spec.touched_rows or "embed/table" in spec.variant:
-            req_rows["embed/table"] = np.unique(np.asarray(tokens))
+            req_rows["embed/table"] = np.unique(np.asarray(request.tokens))
         params = self._params_for(spec, inst, req_rows)
-        logits = self._fwd[spec.family](params, jnp.asarray(tokens))
+        logits = self._fwd[spec.family](params, jnp.asarray(request.tokens))
         logits.block_until_ready()
         exec_s = time.perf_counter() - te
         if inst.metrics is not None:
@@ -255,39 +310,48 @@ class Worker:
             a.meta.nbytes * (2 if a._dev is not None else 1)
             for a in inst.arrays.values()
         )
-        self.pool.put(fn, inst, nbytes)
-        return RequestResult(
-            function=fn, cold=cold, strategy=strategy if cold else "warm",
+        pooled = self.pool.put(fn, inst, nbytes,
+                               cost=self.predicted_cost(fn, strategy))
+        return InvocationResult(
+            function=fn, cold=cold, requested=Strategy.coerce(opts.strategy),
+            strategy=strategy,
             latency_s=time.perf_counter() - t0, boot_s=boot if cold else 0.0,
-            exec_s=exec_s, metrics=inst.metrics if cold else None,
+            exec_s=exec_s, pooled=pooled, worker_id=self.worker_id,
+            metrics=inst.metrics if cold else None,
             output=np.asarray(logits[:, -1, :8]),
         )
 
+    def handle(
+        self,
+        fn: str,
+        tokens: np.ndarray,
+        *,
+        strategy: "Strategy | str" = Strategy.SNAPFAAS,
+        force_cold: bool = False,
+        engine: Optional[str] = None,
+    ) -> InvocationResult:
+        """Deprecated shim over :meth:`invoke` (one release; see DESIGN.md)."""
+        warnings.warn(
+            "Worker.handle(fn, tokens, strategy=..., force_cold=..., "
+            "engine=...) is deprecated; build an InvocationRequest and call "
+            "Worker.invoke / Cluster.submit instead",
+            DeprecationWarning, stacklevel=2,
+        )
+        return self.invoke(InvocationRequest(
+            function=fn, tokens=np.asarray(tokens),
+            options=ColdStartOptions(
+                strategy=Strategy.coerce(strategy),
+                force_cold=force_cold, engine=engine,
+            ),
+        ))
+
     def _loaders(self, spec: FunctionSpec):
-        """source/base loaders for seuss/regular strategies.
-
-        Both deliberately go through the on-disk source artifacts (npz parse
-        + copy): `regular` = boot the whole runtime from storage, `seuss` =
-        import the function from its source — the costs those designs cannot
-        memoize (paper §2.2)."""
-        rec = self.registry.functions[spec.name]
-        base = self.registry.bases[spec.family]
-
-        def source_loader():
-            if spec.source_path:
-                with np.load(spec.source_path) as z:
-                    return {k: z[k] for k in z.files}
-            return {k: np.array(v) for k, v in spec.variant.items()}
-
-        def base_loader():
-            path = self._base_npz.get(spec.family)
-            if path and os.path.exists(path):
-                with np.load(path) as z:
-                    return {k.replace("|", "/"): z[k] for k in z.files}
-            pool = self.registry.pools[spec.family]
-            return {p: np.array(pool.get(p)) for p in base.arrays}
-
-        return {"source_loader": source_loader, "base_loader": base_loader}
+        """Registry-facing adapters over the spec's declared SourceResolver
+        (``seuss``/``regular`` boot from storage artifacts — the costs those
+        designs cannot memoize, paper §2.2)."""
+        resolver = spec.resolver or self._default_resolver(spec)
+        return {"source_loader": resolver.load_source,
+                "base_loader": resolver.load_base}
 
     def source_files(self, fn: str) -> list:
         """On-disk source artifacts of a function (for cache dropping)."""

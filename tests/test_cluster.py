@@ -1,0 +1,145 @@
+"""Cluster scheduler tests: typed submit path, stable sharding, fleet
+metrics, and (slow-marked) the concurrency properties — single-flight cold
+starts and parallel trace replay."""
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    ColdStartOptions,
+    InvocationRequest,
+    InvocationResult,
+    Strategy,
+)
+from repro.serving.cluster import _shard_of
+
+
+@pytest.fixture(scope="module")
+def cluster_and_specs(tmp_path_factory):
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.serving.trace import build_cluster
+    root = str(tmp_path_factory.mktemp("cluster"))
+    cfg = reduced(get_config("gemma-2b"))
+    model = build_model(cfg)
+    cluster, specs = build_cluster(root, cfg, model, n_workers=2,
+                                   n_functions=4)
+    yield (cluster, specs), cfg
+    cluster.shutdown()
+
+
+def _req(spec, cfg, *, strategy=Strategy.SNAPFAAS, force_cold=False, seed=0):
+    from repro.serving.trace import request_tokens
+    toks = request_tokens(spec, np.random.default_rng(seed), cfg.vocab_size)
+    return InvocationRequest(
+        function=spec.name, tokens=toks,
+        options=ColdStartOptions(strategy=strategy, force_cold=force_cold),
+    )
+
+
+class TestSharding:
+    def test_stable_and_total(self):
+        names = [f"fn{i}" for i in range(64)]
+        first = [_shard_of(n, 4) for n in names]
+        assert first == [_shard_of(n, 4) for n in names]   # deterministic
+        assert all(0 <= s < 4 for s in first)
+        assert len(set(first)) > 1                          # actually spreads
+
+    def test_function_lives_on_one_worker(self, cluster_and_specs):
+        (cluster, specs), cfg = cluster_and_specs
+        for spec in specs:
+            owner = cluster.worker_for(spec.name)
+            assert spec.name in owner.specs
+            others = [w for w in cluster.workers if w is not owner]
+            assert all(spec.name not in w.specs for w in others)
+
+
+class TestSubmit:
+    def test_typed_result_and_worker_id(self, cluster_and_specs):
+        (cluster, specs), cfg = cluster_and_specs
+        fut = cluster.submit(_req(specs[0], cfg, force_cold=True))
+        r = fut.result()
+        assert isinstance(r, InvocationResult)
+        assert r.cold and r.strategy is Strategy.SNAPFAAS
+        assert r.worker_id == cluster.worker_for(specs[0].name).worker_id
+        assert r.queue_s >= 0.0
+        assert r.output is not None
+
+    def test_result_is_frozen(self, cluster_and_specs):
+        (cluster, specs), cfg = cluster_and_specs
+        r = cluster.invoke(_req(specs[0], cfg))
+        with pytest.raises(Exception):
+            r.cold = not r.cold
+
+    def test_auto_resolves_per_function(self, cluster_and_specs):
+        (cluster, specs), cfg = cluster_and_specs
+        r = cluster.invoke(_req(specs[1], cfg, strategy=Strategy.AUTO,
+                                force_cold=True))
+        assert r.requested is Strategy.AUTO
+        assert r.strategy in Strategy.fixed()
+
+    def test_fleet_metrics_shape(self, cluster_and_specs):
+        (cluster, specs), cfg = cluster_and_specs
+        cluster.invoke(_req(specs[2], cfg))
+        m = cluster.metrics()
+        assert m["n_workers"] == 2
+        assert m["n_requests"] >= 1
+        assert set(m["pool"]) >= {"hits", "misses", "evictions", "rejections",
+                                  "warm_hit_rate"}
+        assert len(m["per_worker"]) == 2
+
+
+@pytest.mark.slow
+class TestConcurrency:
+    def test_single_flight_cold_start(self, cluster_and_specs):
+        """K concurrent requests to one cold function: exactly one pays the
+        cold start, the rest ride the warm instance it pooled."""
+        (cluster, specs), cfg = cluster_and_specs
+        spec = specs[3]
+        cluster.worker_for(spec.name).pool.drop(spec.name)
+        futs = [cluster.submit(_req(spec, cfg, seed=i)) for i in range(6)]
+        results = [f.result() for f in futs]
+        assert sum(r.cold for r in results) == 1
+        outs = [r.output for r in results]
+        for o in outs[1:]:
+            assert o.shape == outs[0].shape
+
+    def test_replay_preserves_order_and_runs_concurrently(self, cluster_and_specs):
+        (cluster, specs), cfg = cluster_and_specs
+        from repro.serving.trace import replay_cluster_trace
+        results = replay_cluster_trace(
+            cluster, specs, n_requests=12, cold_fraction=0.25,
+            strategy="snapfaas", seed=3,
+        )
+        assert len(results) == 12
+        # result i corresponds to request i (round-robin schedule)
+        for i, r in enumerate(results):
+            assert r.function == specs[i % len(specs)].name
+
+    def test_concurrent_distinct_functions_correct(self, cluster_and_specs):
+        """Cold-starting different functions in parallel on shared stores
+        produces the same logits as serial execution."""
+        (cluster, specs), cfg = cluster_and_specs
+        serial = {}
+        for spec in specs[:3]:
+            r = cluster.invoke(_req(spec, cfg, force_cold=True, seed=42))
+            serial[spec.name] = r.output
+        futs = [cluster.submit(_req(spec, cfg, force_cold=True, seed=42))
+                for spec in specs[:3]]
+        for spec, fut in zip(specs[:3], futs):
+            np.testing.assert_allclose(fut.result().output, serial[spec.name],
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_zipf_trace_and_metrics_consistency(self, cluster_and_specs):
+        (cluster, specs), cfg = cluster_and_specs
+        from repro.serving.trace import replay_cluster_trace
+        before = cluster.metrics()["n_requests"]
+        results = replay_cluster_trace(
+            cluster, specs, n_requests=20, cold_fraction=0.0,
+            strategy="snapfaas", seed=5, alpha=1.2,
+        )
+        after = cluster.metrics()
+        assert after["n_requests"] - before == 20
+        assert after["n_cold"] <= after["n_requests"]
+        assert 0.0 <= after["pool"]["warm_hit_rate"] <= 1.0
+        assert len(results) == 20

@@ -1,0 +1,287 @@
+"""Warm-pool policy tests: eviction order per policy, honest budget
+accounting (including the 2x charge for device-patched instances), put()
+rejection surfacing, and Strategy.AUTO's planner-driven selection."""
+
+import numpy as np
+import pytest
+
+from repro.core.planner import PAPER_C220G5, SnapshotSizes, predict
+from repro.serving import (
+    GDSFPolicy,
+    InstancePool,
+    LRUPolicy,
+    Strategy,
+    TTLPolicy,
+    select_strategy,
+)
+
+
+# ------------------------------------------------------------- pool + policies
+
+class TestLRU:
+    def test_eviction_order_is_recency(self):
+        pool = InstancePool(100, policy=LRUPolicy())
+        assert pool.put("a", "A", 40)
+        assert pool.put("b", "B", 40)
+        assert pool.get("a") == "A"        # refresh a
+        assert pool.put("c", "C", 40)      # must evict b (LRU), not a
+        assert pool.get("b") is None
+        assert pool.get("a") == "A"
+        assert pool.get("c") == "C"
+
+    def test_budget_accounting(self):
+        pool = InstancePool(100, policy=LRUPolicy())
+        pool.put("a", "A", 60)
+        pool.put("b", "B", 30)
+        assert pool.used == 90
+        pool.drop("a")
+        assert pool.used == 30
+        pool.put("b", "B2", 50)            # re-put refreshes size
+        assert pool.used == 50 and len(pool) == 1
+
+    def test_put_rejects_oversize_and_counts(self):
+        """Seed bug: an instance larger than the whole budget evicted
+        everything, then silently vanished.  Now the caller learns."""
+        pool = InstancePool(100, policy=LRUPolicy())
+        assert pool.put("a", "A", 60)
+        assert not pool.put("big", "B", 150)
+        assert pool.rejections == 1
+        assert pool.get("a") == "A"        # small entry not collateral damage
+        assert pool.used == 60
+
+    def test_stats_and_hit_rate(self):
+        pool = InstancePool(100)
+        pool.put("a", "A", 10)
+        pool.get("a"); pool.get("a"); pool.get("zzz")
+        s = pool.stats()
+        assert s["hits"] == 2 and s["misses"] == 1
+        assert s["warm_hit_rate"] == pytest.approx(2 / 3, abs=1e-4)
+
+
+class TestGDSF:
+    def test_keeps_expensive_frequent_over_recent_cheap(self):
+        pool = InstancePool(100, policy=GDSFPolicy())
+        # "hot" is popular and expensive to re-boot; "scan" is a one-touch
+        # cheap function that arrives later (more recent — LRU would keep it)
+        pool.put("hot", "H", 50, cost=1.0)
+        for _ in range(5):
+            assert pool.get("hot") == "H"
+        pool.put("scan1", "S1", 50, cost=0.001)
+        assert pool.put("scan2", "S2", 50, cost=0.001)  # evicts scan1, not hot
+        assert pool.get("hot") == "H"
+        assert pool.get("scan1") is None
+
+    def test_clock_aging_lets_new_entries_compete(self):
+        p = GDSFPolicy()
+        p.on_admit("old", 1 << 20, 10.0)
+        p.on_evict("old")
+        # after eviction the clock rose to old's H; a new cheap entry's
+        # priority builds on the clock, so it isn't instantly the victim
+        # against hypothetical stale entries
+        assert p.clock > 0
+
+    def test_clock_only_raised_by_true_eviction(self):
+        """Warm-hit re-puts and explicit drops must not age the clock, or
+        GDSF degenerates to recency ordering (every warm hit would raise
+        the global floor past older entries' priorities)."""
+        pool = InstancePool(100, policy=GDSFPolicy())
+        pool.put("hot", "H", 50, cost=1.0)
+        for _ in range(3):
+            assert pool.get("hot") == "H"
+            pool.put("hot", "H", 50, cost=1.0)   # refresh re-put
+        assert pool.policy.clock == 0.0
+        pool.drop("hot")
+        assert pool.policy.clock == 0.0
+        pool.put("a", "A", 60, cost=0.5)
+        pool.put("b", "B", 60, cost=0.5)         # evicts a → clock = H(a)
+        assert pool.policy.clock > 0.0
+
+    def test_refresh_reput_does_not_inflate_frequency(self):
+        """Worker.invoke re-puts the instance after every request; that
+        accounting refresh must not count as an access, or freq tracks pool
+        mechanics instead of invocations (H inflated ~2x for warm-served
+        functions)."""
+        policy = GDSFPolicy()
+        pool = InstancePool(100, policy=policy)
+        pool.put("a", "A", 10, cost=0.5)           # cold: admit (+1)
+        assert pool.get("a") == "A"                # warm hit (+1)
+        pool.put("a", "A", 10, cost=0.5)           # end-of-request refresh
+        assert policy._freq["a"] == 2
+
+    def test_eviction_order_is_min_priority(self):
+        pool = InstancePool(90, policy=GDSFPolicy())
+        pool.put("cheap", "c", 30, cost=0.01)
+        pool.put("mid", "m", 30, cost=0.1)
+        pool.put("dear", "d", 30, cost=1.0)
+        pool.put("new", "n", 30, cost=0.5)   # evicts "cheap" (lowest H)
+        assert pool.get("cheap") is None
+        assert pool.get("dear") == "d"
+
+
+class TestTTL:
+    def test_expiry_drops_entry(self):
+        now = [0.0]
+        pool = InstancePool(100, policy=TTLPolicy(ttl_s=10.0, clock=lambda: now[0]))
+        pool.put("a", "A", 10)
+        now[0] = 5.0
+        assert pool.get("a") == "A"        # touch refreshes the grace window
+        now[0] = 14.0
+        assert pool.get("a") == "A"        # 5 + 10 > 14; refreshes to 24
+        now[0] = 25.0
+        assert pool.get("a") is None       # expired
+        assert pool.used == 0
+
+    def test_eviction_order_is_earliest_expiry(self):
+        now = [0.0]
+        pool = InstancePool(100, policy=TTLPolicy(ttl_s=10.0, clock=lambda: now[0]))
+        pool.put("a", "A", 40)
+        now[0] = 1.0
+        pool.put("b", "B", 40)
+        now[0] = 2.0
+        pool.put("c", "C", 40)             # evicts a (earliest deadline)
+        assert pool.get("a") is None
+        assert pool.get("b") == "B"
+
+
+# --------------------------------------------------- device-copy (2x) charge
+
+class TestPoolChargesDeviceCopies:
+    @pytest.fixture(scope="class")
+    def worker_and_specs(self, tmp_path_factory):
+        from repro.configs import get_config, reduced
+        from repro.models import build_model
+        from repro.serving.trace import build_functions
+        root = str(tmp_path_factory.mktemp("poolcharge"))
+        cfg = reduced(get_config("gemma-2b"))
+        model = build_model(cfg)
+        return build_functions(root, cfg, model, n_functions=3), cfg
+
+    def test_patched_instance_charged_twice(self, worker_and_specs):
+        """A warm instance whose arrays were patched on device pins a
+        full-size accelerator copy (ma._dev) on top of the host buffers —
+        the pool must charge both (Fig. 7 residency honesty)."""
+        from repro.serving import ColdStartOptions, InvocationRequest
+        from repro.serving.trace import request_tokens
+        (worker, specs), cfg = worker_and_specs
+        spec = specs[1]  # head: full-table diff → device-patchable arrays
+        toks = request_tokens(spec, np.random.default_rng(0), cfg.vocab_size)
+        r = worker.invoke(InvocationRequest(
+            function=spec.name, tokens=toks,
+            options=ColdStartOptions(strategy=Strategy.SNAPFAAS,
+                                     force_cold=True),
+        ))
+        assert r.pooled
+        charged = worker.pool.size_of(spec.name)
+        inst = worker.pool.get(spec.name)
+        expected = sum(
+            a.meta.nbytes * (2 if a._dev is not None else 1)
+            for a in inst.arrays.values()
+        )
+        assert charged == expected
+        assert any(a._dev is not None for a in inst.arrays.values()), \
+            "test premise broken: no array was device-patched"
+        assert charged > sum(a.meta.nbytes for a in inst.arrays.values())
+
+
+# ----------------------------------------------------------- Strategy.AUTO
+
+def _sizes(**kw) -> SnapshotSizes:
+    base = dict(
+        full_bytes=0, diff_bytes=0, ws_bytes=0, ws_full_bytes=0, ws_chunks=0,
+        non_ws_diff_bytes=0, non_ws_diff_chunks=0, shared_bytes=0,
+        cow_bytes=0, cow_faults=0, init_compute=0.0, residual_init=0.0,
+    )
+    base.update(kw)
+    return SnapshotSizes(**base)
+
+
+class TestAutoStrategy:
+    hw = PAPER_C220G5
+
+    def _check_argmin(self, sizes):
+        best, preds = select_strategy(sizes, self.hw)
+        want = min(preds.values(), key=lambda p: p.total).total
+        assert preds[best].total == pytest.approx(want)
+        return best
+
+    def test_small_ws_picks_snapfaas(self):
+        s = _sizes(full_bytes=200 << 20, diff_bytes=100 << 20,
+                   ws_bytes=1 << 20, ws_full_bytes=150 << 20,
+                   init_compute=1.0)
+        assert self._check_argmin(s) is Strategy.SNAPFAAS
+
+    def test_tiny_init_huge_diff_picks_seuss(self):
+        s = _sizes(full_bytes=500 << 20, diff_bytes=400 << 20,
+                   ws_bytes=100 << 20, ws_full_bytes=400 << 20,
+                   init_compute=0.001, cow_bytes=1 << 20, cow_faults=16)
+        assert self._check_argmin(s) is Strategy.SEUSS
+
+    def test_huge_cow_and_demand_picks_regular(self):
+        # CoW + demand misses kill every sharing strategy; reading the full
+        # image sequentially is cheapest
+        s = _sizes(full_bytes=50 << 20, diff_bytes=45 << 20,
+                   ws_bytes=40 << 20, ws_full_bytes=50 << 20,
+                   init_compute=0.0,
+                   cow_bytes=10 << 30, cow_faults=1 << 16,
+                   exec_demand_miss_bytes=10 << 30,
+                   exec_demand_miss_chunks=1 << 16)
+        assert self._check_argmin(s) is Strategy.REGULAR
+
+    def test_prediction_matches_planner(self):
+        s = _sizes(full_bytes=64 << 20, diff_bytes=8 << 20, ws_bytes=1 << 20,
+                   ws_full_bytes=32 << 20, init_compute=0.5)
+        _, preds = select_strategy(s, self.hw)
+        for strat, pred in preds.items():
+            ref = predict(strat.value, s, self.hw)
+            assert pred.total == pytest.approx(ref.total)
+
+    def test_worker_resolves_auto_via_planner(self, tmp_path, monkeypatch):
+        """Worker.resolve_strategy(fn, AUTO) returns select_strategy's argmin
+        over the registry's measured sizes."""
+        from repro.configs import get_config, reduced
+        from repro.models import build_model
+        from repro.serving.trace import build_functions
+        cfg = reduced(get_config("gemma-2b"))
+        model = build_model(cfg)
+        worker, specs = build_functions(str(tmp_path), cfg, model,
+                                        n_functions=1)
+        fn = specs[0].name
+        synthetic = _sizes(full_bytes=500 << 20, diff_bytes=400 << 20,
+                           ws_bytes=100 << 20, ws_full_bytes=400 << 20,
+                           init_compute=0.001)
+        monkeypatch.setattr(worker.registry, "sizes", lambda name: synthetic)
+        worker._auto.clear()
+        assert worker.resolve_strategy(fn, Strategy.AUTO) is Strategy.SEUSS
+        assert worker.resolve_strategy(fn, "snapfaas") is Strategy.SNAPFAAS
+        # cost hook: predicted re-cold-start latency comes from the same table
+        cost = worker.predicted_cost(fn, Strategy.SEUSS)
+        assert cost == pytest.approx(
+            predict("seuss", synthetic, worker.storage).total)
+
+    def test_auto_cache_invalidated_by_ws_regeneration(self, tmp_path):
+        """Regenerating a function's working set through the registry (which
+        clears its restore plans) must also invalidate the worker's cached
+        AUTO resolution."""
+        from repro.configs import get_config, reduced
+        from repro.core import AccessLog
+        from repro.models import build_model
+        from repro.serving.trace import build_functions
+        cfg = reduced(get_config("gemma-2b"))
+        model = build_model(cfg)
+        worker, specs = build_functions(str(tmp_path), cfg, model,
+                                        n_functions=1)
+        fn = specs[0].name
+        before = worker._auto_entry(fn)
+        log = AccessLog()
+        for path in specs[0].variant:
+            log.touch(path)
+        worker.registry.generate_working_set(fn, log)   # new ws object
+        after = worker._auto_entry(fn)
+        assert after[0] is worker.registry.functions[fn].ws
+        assert after[0] is not before[0]                # cache rebuilt
+
+    def test_coerce_rejects_unknown(self):
+        with pytest.raises(ValueError, match="unknown strategy"):
+            Strategy.coerce("warmish")
+        assert Strategy.coerce("snapfaas-") is Strategy.SNAPFAAS_MINUS
+        assert Strategy.coerce(Strategy.AUTO) is Strategy.AUTO
