@@ -58,10 +58,15 @@ SUITE = [
 STRATEGIES = ["regular", "reap", "seuss", "snapfaas-", "snapfaas"]
 
 
-def build_suite(root: str, *, n_functions: Optional[int] = None, seed: int = 0):
-    """Worker + paper-style function suite over the bench family."""
+def build_suite(root: str, *, n_functions: Optional[int] = None, seed: int = 0,
+                tiers=None, prefetch_on_register: bool = True):
+    """Worker + paper-style function suite over the bench family.
+
+    ``tiers`` (a :class:`repro.core.tiers.TierSpec`) configures the worker's
+    storage hierarchy — the tier benches use it to add a throttled remote."""
     model = build_model(BENCH_CFG)
-    worker = Worker(os.path.join(root, "worker"), chunk_bytes=256 * 1024)
+    worker = Worker(os.path.join(root, "worker"), chunk_bytes=256 * 1024,
+                    tiers=tiers, prefetch_on_register=prefetch_on_register)
     base_params = model.init(seed)
     worker.register_runtime(BENCH_CFG.name, model, base_params)
     base_flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
@@ -112,11 +117,17 @@ def drop_file_cache(paths) -> None:
 
 
 def cold_request(worker: Worker, spec, strategy: str, *, drop_cache: bool = True,
-                 seed: int = 0, engine: str | None = None):
+                 seed: int = 0, engine: str | None = None,
+                 clear_ram: bool = True, promote: bool | None = None):
     """One measured cold request (page cache dropped first — packs AND the
-    npz source artifacts, so every strategy's reads hit the medium)."""
+    npz source artifacts, so every strategy's reads hit the medium).
+
+    ``clear_ram=False`` keeps the RAM chunk-cache tier warm across the
+    drop (the warm-tier benches); ``promote`` is the tier hint forwarded
+    to the restore (False keeps the *eager set* remote-resident across
+    rounds — exec-time demand faults still follow the store default)."""
     if drop_cache:
-        worker.registry.store.drop_page_cache()
+        worker.registry.store.drop_page_cache(clear_ram=clear_ram)
         drop_file_cache(worker.source_files(spec.name))
     toks = request_tokens(spec, np.random.default_rng(seed),
                           BENCH_CFG.vocab_size, batch=1,
@@ -124,7 +135,8 @@ def cold_request(worker: Worker, spec, strategy: str, *, drop_cache: bool = True
     return worker.invoke(InvocationRequest(
         function=spec.name, tokens=toks,
         options=ColdStartOptions(strategy=Strategy.coerce(strategy),
-                                 force_cold=True, engine=engine),
+                                 force_cold=True, engine=engine,
+                                 promote=promote),
     ))
 
 

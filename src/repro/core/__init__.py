@@ -14,19 +14,37 @@ Public API:
 * :class:`~repro.core.registry.ZygoteRegistry` — worker-side lifecycle
 """
 
-from .chunkstore import DEFAULT_CHUNK_BYTES, ChunkRef, ChunkStore
+from .chunkstore import (
+    DEFAULT_CHUNK_BYTES,
+    ChunkRef,
+    ChunkStore,
+    IndexCorruptionError,
+)
 from .metrics import ColdStartMetrics
 from .planner import (
     PAPER_C220G5,
     TPU_LOCAL_SSD,
     TPU_OBJECT_STORE,
+    TPU_TIERED,
     ColdStartPrediction,
     SnapshotSizes,
     StorageModel,
+    TieredStorageModel,
+    TierModel,
     calibrate_container,
     lower_bound,
     plan_restore,
     predict,
+)
+from .tiers import (
+    PackTier,
+    PrefetchStats,
+    RamCacheTier,
+    RemoteTier,
+    StorageTier,
+    TieredChunkStore,
+    TierReadStats,
+    TierSpec,
 )
 from .registry import PLANNED_STRATEGIES, STRATEGIES, FunctionRecord, ZygoteRegistry
 from .restore import (
@@ -58,11 +76,16 @@ from .workingset import AccessLog, WorkingSet, build_working_set
 __all__ = [
     "AccessLog", "ArrayMeta", "ArrayPatch", "BasePool", "ChunkRef",
     "ChunkStore", "ColdStartMetrics", "ColdStartPrediction",
-    "DEFAULT_CHUNK_BYTES", "FunctionRecord", "MaterializedArray",
-    "PAPER_C220G5", "PLANNED_STRATEGIES", "RestoredInstance", "RestorePlan",
+    "DEFAULT_CHUNK_BYTES", "FunctionRecord", "IndexCorruptionError",
+    "MaterializedArray",
+    "PAPER_C220G5", "PLANNED_STRATEGIES", "PackTier", "PrefetchStats",
+    "RamCacheTier", "RemoteTier", "RestoredInstance", "RestorePlan",
     "STRATEGIES",
-    "SnapshotManifest", "SnapshotSizes", "StorageModel", "TPU_LOCAL_SSD",
-    "TPU_OBJECT_STORE", "WorkingSet", "build_restore_plan",
+    "SnapshotManifest", "SnapshotSizes", "StorageModel", "StorageTier",
+    "TPU_LOCAL_SSD",
+    "TPU_OBJECT_STORE", "TPU_TIERED", "TierModel", "TierReadStats",
+    "TierSpec", "TieredChunkStore", "TieredStorageModel", "WorkingSet",
+    "build_restore_plan",
     "build_working_set", "calibrate_container", "execute_restore_plan",
     "flatten_pytree", "lower_bound", "plan_restore", "predict", "resolve",
     "restore_layered", "restore_reap", "restore_regular", "restore_seuss",

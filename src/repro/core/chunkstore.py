@@ -49,6 +49,16 @@ _ZERO_DIGEST = "0" * 32
 
 _HAVE_PREADV = hasattr(os, "preadv")
 
+
+class IndexCorruptionError(RuntimeError):
+    """``index.json`` failed to parse or has the wrong shape.
+
+    A truncated or garbled index means the store can no longer locate chunk
+    payloads; silently starting empty would orphan every pack.  Callers see
+    the path and the underlying cause and decide (restore from a replica,
+    re-capture snapshots, ...).
+    """
+
 _io_pool: Optional[ThreadPoolExecutor] = None
 _hash_pool: Optional[ThreadPoolExecutor] = None
 _pool_lock = threading.Lock()
@@ -220,6 +230,11 @@ class PackWriter:
         self.offset += n
         return loc
 
+    def flush(self) -> None:
+        """Make appended payloads visible to readers (page cache, no fsync).
+        Long-lived writers (tier promotion packs) flush after each batch."""
+        self._f.flush()
+
     def close(self) -> None:
         self._f.flush()
         os.fsync(self._f.fileno())
@@ -288,27 +303,67 @@ class ChunkStore:
 
     def _load_index(self) -> None:
         p = self._index_path()
-        if os.path.exists(p):
+        if not os.path.exists(p):
+            return
+        try:
             with open(p) as f:
                 raw = json.load(f)
             self._index = {
                 d: ChunkLoc(pack=v[0], offset=int(v[1]), size=int(v[2]))
                 for d, v in raw.items()
             }
+        except (ValueError, TypeError, KeyError, IndexError, AttributeError) as e:
+            raise IndexCorruptionError(
+                f"chunk index {p} is corrupt ({e!r}); refusing to start with "
+                f"an empty index over existing packs"
+            ) from e
 
     def save_index(self) -> None:
+        """Persist the index atomically: write a temp file, fsync, then
+        ``os.replace`` — a crash mid-write leaves the previous index intact,
+        never a truncated one."""
         with self._lock:
             raw = {d: [l.pack, l.offset, l.size] for d, l in self._index.items()}
         tmp = self._index_path() + ".tmp"
         with open(tmp, "w") as f:
             json.dump(raw, f)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, self._index_path())
+
+    def register_chunks(self, entries: Iterable[Tuple[str, ChunkLoc]]) -> None:
+        """Publish already-written chunk locations into the index.
+
+        Writers that append to a long-lived pack (tier promotion) must
+        flush the pack *before* registering — a digest visible in the index
+        is immediately readable by concurrent scatter-reads, so indexing
+        ahead of the flush would let ``preadv`` race past EOF."""
+        with self._lock:
+            for digest, loc in entries:
+                self._index.setdefault(digest, loc)
+
+    def forget(self, digests: Iterable[str]) -> int:
+        """Drop index entries (payload bytes stay in their packs, now
+        unreachable).  Used by tier demotion: a chunk moved to a colder tier
+        must stop resolving as local.  Returns bytes forgotten."""
+        freed = 0
+        with self._lock:
+            for d in digests:
+                loc = self._index.pop(d, None)
+                if loc is not None:
+                    freed += loc.size
+        return freed
 
     def __contains__(self, digest: str) -> bool:
         return digest == _ZERO_DIGEST or digest in self._index
 
     def location(self, digest: str) -> ChunkLoc:
         return self._index[digest]
+
+    def digests(self) -> List[str]:
+        """All indexed digests (tier accounting: union across stores)."""
+        with self._lock:
+            return list(self._index)
 
     @property
     def num_chunks(self) -> int:
@@ -361,9 +416,17 @@ class ChunkStore:
 
     # ------------------------------------------------------------------- read
 
-    def _pack_mmap(self, pack_id: str) -> mmap.mmap:
+    def _pack_mmap(self, pack_id: str, need_end: int = 0) -> mmap.mmap:
         with self._lock:
             m = self._mmaps.get(pack_id)
+            if m is not None and need_end > len(m):
+                # The pack grew after mapping (tier promotion appends to a
+                # long-lived pack) — map again to cover the new tail.  The
+                # stale mapping is NOT closed here: a concurrent get_chunk
+                # may still be slicing it; dropping the reference lets GC
+                # unmap once the last reader is done.
+                self._files[pack_id].close()  # type: ignore[attr-defined]
+                m = None
             if m is None:
                 f = open(os.path.join(self.root, "packs", f"{pack_id}.pack"), "rb")
                 m = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
@@ -376,7 +439,7 @@ class ChunkStore:
         if ref.zero:
             return b"\x00" * ref.size
         loc = self._index[ref.digest]
-        m = self._pack_mmap(loc.pack)
+        m = self._pack_mmap(loc.pack, need_end=loc.offset + loc.size)
         return m[loc.offset : loc.offset + loc.size]
 
     def read_batch(

@@ -52,6 +52,13 @@ class ColdStartMetrics:
     t_exec: float = 0.0
     # extra bookkeeping
     shared_bytes_mapped: int = 0  # base bytes served from the in-RAM pool
+    # tier breakdown of the B phase (tiered stores only): which storage tier
+    # served how much of the eager set, remote-link time, and bytes promoted
+    # downward as a side effect of this restore
+    tier_chunks: Dict[str, int] = field(default_factory=dict)
+    tier_bytes: Dict[str, int] = field(default_factory=dict)
+    remote_fetch_s: float = 0.0
+    promoted_bytes: int = 0
 
     @property
     def boot_latency(self) -> float:
@@ -91,6 +98,10 @@ class ColdStartMetrics:
             cow_faults=self.cow_faults,
             shared_bytes=self.shared_bytes_mapped,
         )
+        if self.tier_bytes:
+            r["tier_bytes"] = dict(self.tier_bytes)
+            r["remote_fetch_ms"] = round(self.remote_fetch_s * 1e3, 3)
+            r["promoted_bytes"] = self.promoted_bytes
         return r
 
 

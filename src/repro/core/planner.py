@@ -37,8 +37,15 @@ class StorageModel:
     bw_dma: float        # bytes/s — host→device (HBM) DMA bandwidth
     preconfig: float     # s — constant instance pre-configuration cost (c)
 
-    def eager_time(self, nbytes: int, nchunks: int = 1) -> float:
-        """One batched sequential read (readv)."""
+    def eager_time(
+        self,
+        nbytes: int,
+        nchunks: int = 1,
+        split: Optional[Dict[str, int]] = None,
+    ) -> float:
+        """One batched sequential read (readv).  ``split`` — bytes of the
+        eager set per residency tier — is ignored by the flat model; the
+        tiered subclass prices each stream at its own tier's constants."""
         if nbytes == 0:
             return 0.0
         return self.lat_store + nbytes / self.bw_store
@@ -49,6 +56,56 @@ class StorageModel:
 
     def cow_time(self, nbytes: int, nfaults: int) -> float:
         return nfaults * self.lat_mem + nbytes / self.bw_mem
+
+
+@dataclass(frozen=True)
+class TierModel:
+    """Constants of one level of a storage hierarchy (RAM / NVMe / remote)."""
+
+    name: str            # must match the TieredChunkStore tier name
+    bw_store: float      # bytes/s
+    lat_store: float     # s per batched request
+
+    def stream_time(self, nbytes: int) -> float:
+        if nbytes == 0:
+            return 0.0
+        return self.lat_store + nbytes / self.bw_store
+
+
+@dataclass(frozen=True)
+class TieredStorageModel(StorageModel):
+    """Eq. 1 over a storage hierarchy.
+
+    The pipelined restore engine overlaps the per-tier streams (remote
+    fetch, local ``preadv``, RAM memcpy), so the B term is the *max* of the
+    per-tier stream times over the eager set's actual residency split —
+    not their sum.  Bytes in the split not covered by a modelled tier fall
+    back to the flat ``bw_store``/``lat_store`` constants.
+    """
+
+    tiers: Tuple[TierModel, ...] = ()
+
+    def eager_time(
+        self,
+        nbytes: int,
+        nchunks: int = 1,
+        split: Optional[Dict[str, int]] = None,
+    ) -> float:
+        if nbytes == 0:
+            return 0.0
+        if not split or not self.tiers:
+            return super().eager_time(nbytes, nchunks)
+        t = 0.0
+        covered = 0
+        for tm in self.tiers:
+            b = split.get(tm.name, 0)
+            covered += b
+            if b:
+                t = max(t, tm.stream_time(b))
+        rest = nbytes - covered
+        if rest > 0:
+            t = max(t, self.lat_store + rest / self.bw_store)
+        return t
 
 
 # --- presets ---------------------------------------------------------------
@@ -67,6 +124,19 @@ TPU_LOCAL_SSD = StorageModel(
 TPU_OBJECT_STORE = StorageModel(
     name="tpu-object-store", bw_store=1.2e9, lat_store=5e-3,
     bw_mem=80e9, lat_mem=100e-9, bw_dma=32e9, preconfig=3e-3,
+)
+
+# A worker restoring through the full hierarchy: RAM chunk cache over local
+# NVMe over a shared object store.  The flat constants (bw_store/lat_store)
+# price bytes whose residency is unknown — conservatively, the local tier.
+TPU_TIERED = TieredStorageModel(
+    name="tpu-tiered", bw_store=3.0e9, lat_store=80e-6,
+    bw_mem=80e9, lat_mem=100e-9, bw_dma=32e9, preconfig=3e-3,
+    tiers=(
+        TierModel(name="ram", bw_store=60e9, lat_store=2e-6),
+        TierModel(name="local", bw_store=3.0e9, lat_store=80e-6),
+        TierModel(name="remote", bw_store=1.2e9, lat_store=5e-3),
+    ),
 )
 
 
@@ -151,20 +221,31 @@ class SnapshotSizes:
     residual_init: float       # un-memoizable init (all strategies)
     exec_demand_miss_bytes: int = 0   # WS misses observed at runtime
     exec_demand_miss_chunks: int = 0
+    # per-strategy eager-set residency: {"full"|"diff"|"ws"|"ws_full":
+    # {tier name: bytes}} — measured from the TieredChunkStore, consumed by
+    # TieredStorageModel.eager_time (empty → flat single-tier pricing)
+    tier_splits: Dict[str, Dict[str, int]] = None  # type: ignore[assignment]
+
+    def split(self, key: str) -> Optional[Dict[str, int]]:
+        if not self.tier_splits:
+            return None
+        return self.tier_splits.get(key)
 
 
 def predict(strategy: str, s: SnapshotSizes, hw: StorageModel) -> ColdStartPrediction:
     if strategy == "regular":
         return ColdStartPrediction(
             strategy, A=hw.preconfig,
-            B=hw.eager_time(s.full_bytes),
+            B=hw.eager_time(s.full_bytes, split=s.split("full")),
             C=s.init_compute + s.residual_init, D=0.0,
         )
     if strategy == "reap":
         # full-function snapshot: WS eager, the rest demand-paged at runtime.
         return ColdStartPrediction(
             strategy, A=hw.preconfig,
-            B=hw.eager_time(s.ws_full_bytes if s.ws_full_bytes else s.full_bytes),
+            B=(hw.eager_time(s.ws_full_bytes, split=s.split("ws_full"))
+               if s.ws_full_bytes
+               else hw.eager_time(s.full_bytes, split=s.split("full"))),
             C=s.residual_init,
             D=hw.demand_time(s.exec_demand_miss_bytes, s.exec_demand_miss_chunks),
         )
@@ -177,14 +258,14 @@ def predict(strategy: str, s: SnapshotSizes, hw: StorageModel) -> ColdStartPredi
     if strategy == "snapfaas-":
         return ColdStartPrediction(
             strategy, A=hw.preconfig,
-            B=hw.eager_time(s.diff_bytes),
+            B=hw.eager_time(s.diff_bytes, split=s.split("diff")),
             C=s.residual_init,
             D=hw.cow_time(s.cow_bytes, s.cow_faults),
         )
     if strategy == "snapfaas":
         return ColdStartPrediction(
             strategy, A=hw.preconfig,
-            B=hw.eager_time(s.ws_bytes),
+            B=hw.eager_time(s.ws_bytes, split=s.split("ws")),
             C=s.residual_init,
             D=hw.cow_time(s.cow_bytes, s.cow_faults)
             + hw.demand_time(s.exec_demand_miss_bytes, s.exec_demand_miss_chunks),
@@ -195,7 +276,10 @@ def predict(strategy: str, s: SnapshotSizes, hw: StorageModel) -> ColdStartPredi
 def lower_bound(s: SnapshotSizes, hw: StorageModel) -> float:
     """The paper's practical lower bound (§8): pre-config overlapped with the
     minimal unique-byte eager read, plus irreducible init."""
-    return max(hw.preconfig, hw.eager_time(s.ws_bytes)) + s.residual_init
+    return (
+        max(hw.preconfig, hw.eager_time(s.ws_bytes, split=s.split("ws")))
+        + s.residual_init
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -20,9 +20,10 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .chunkstore import DEFAULT_CHUNK_BYTES, ChunkStore
+from .chunkstore import DEFAULT_CHUNK_BYTES, ChunkRef, ChunkStore
 from .metrics import ColdStartMetrics
 from .planner import SnapshotSizes, StorageModel
+from .tiers import PrefetchStats, TieredChunkStore, TierSpec
 from .restore import (
     BasePool,
     RestoredInstance,
@@ -61,15 +62,27 @@ class FunctionRecord:
     source_path: str = ""               # original checkpoint (SEUSS/regular)
     init_compute_s: float = 0.0         # measured function-init compute
     plans: Dict[str, RestorePlan] = field(default_factory=dict)  # per strategy
+    # cached eager-set refs per planner category (residency-independent;
+    # cleared with the working set) — keeps tier-movement replans to a
+    # residency() dict lookup instead of two full resolve() passes
+    category_refs: Optional[Dict[str, List[ChunkRef]]] = None
 
 
 class ZygoteRegistry:
-    """One per worker. Owns the chunk store, base pools and function records."""
+    """One per worker. Owns the storage hierarchy, base pools and function
+    records.  The store is a :class:`~repro.core.tiers.TieredChunkStore`
+    (RAM chunk cache over local packs over an optional simulated remote
+    tier); ``tiers`` configures capacities and the remote throttle."""
 
-    def __init__(self, root: str, chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+    def __init__(
+        self,
+        root: str,
+        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        tiers: Optional[TierSpec] = None,
+    ):
         self.root = root
         os.makedirs(root, exist_ok=True)
-        self.store = ChunkStore(os.path.join(root, "store"))
+        self.store = TieredChunkStore(os.path.join(root, "store"), spec=tiers)
         self.chunk_bytes = chunk_bytes
         self.bases: Dict[str, SnapshotManifest] = {}
         self.pools: Dict[str, BasePool] = {}
@@ -135,18 +148,95 @@ class ZygoteRegistry:
         )
         rec.ws_full.save(self.root)
         rec.plans.clear()  # WS changed → cached eager placement is stale
+        rec.category_refs = None
+
+    # -- tier movement --------------------------------------------------------
+
+    def _category_refs(self, name: str) -> Dict[str, List[ChunkRef]]:
+        """Eager-set chunk refs per planner category (full/diff/ws/ws_full).
+
+        Cached on the record: the categorisation depends only on manifests
+        and working sets, not tier residency, so tier movement never pays
+        the resolve passes again."""
+        rec = self.functions[name]
+        if rec.category_refs is not None:
+            return rec.category_refs
+        base = self.bases[rec.runtime]
+        resolved = resolve(base, rec.diff)
+        full_resolved = resolve(None, rec.full)
+        out: Dict[str, List[ChunkRef]] = {
+            "full": [
+                c for a in rec.full.arrays.values()
+                for c in a.chunks if c is not None and not c.zero
+            ],
+            "diff": [
+                ra.sources[i][1]
+                for ra in resolved.values()
+                for i in ra.dirty_indices()
+                if not ra.sources[i][1].zero
+            ],
+        }
+        for key, ws, res in (("ws", rec.ws, resolved),
+                             ("ws_full", rec.ws_full, full_resolved)):
+            refs: List[ChunkRef] = []
+            if ws is not None:
+                for path, idx in ws.chunks:
+                    ra = res.get(path)
+                    if ra is None or idx >= len(ra.sources):
+                        continue
+                    _, ref = ra.sources[idx]
+                    if not ref.zero:
+                        refs.append(ref)
+            out[key] = refs
+        rec.category_refs = out
+        return out
+
+    def prefetch_working_set(self, name: str) -> PrefetchStats:
+        """Promote ``name``'s working set into the warm tiers (RAM cache +
+        local packs) — the registration/shard-assignment prefetch step.
+        Remote-resident WS chunks cross the throttled link here, once, so
+        cold starts stop paying it."""
+        cats = self._category_refs(name)
+        refs = cats["ws"] if cats["ws"] else cats["diff"]
+        return self.store.prefetch(refs)
+
+    def demote_function(self, name: str) -> int:
+        """Move ``name``'s snapshot chunks to the remote tier (simulating a
+        function whose snapshots were captured on another worker).  Base
+        chunks shared with the runtime family stay local — demoting them
+        would move every sibling function's data too."""
+        rec = self.functions[name]
+        base = self.bases[rec.runtime]
+        base_digests = {
+            c.digest for a in base.arrays.values()
+            for c in a.chunks if c is not None and not c.zero
+        }
+        refs = [
+            c for m in (rec.diff, rec.full) for a in m.arrays.values()
+            for c in a.chunks
+            if c is not None and not c.zero and c.digest not in base_digests
+        ]
+        return self.store.demote(refs)
 
     # -- cold start -----------------------------------------------------------
 
     def restore_plan(self, name: str, strategy: str) -> RestorePlan:
-        """The cached RestorePlan for (function, strategy); built on first use.
+        """The cached RestorePlan for (function, strategy); built on first
+        use, with its tier placement refreshed when residency moved.
 
         Resolving layers, classifying chunks and computing scatter-read
-        destinations happens here exactly once — cold starts only execute.
+        destinations happens here exactly once — chunk classification does
+        not depend on tier residency, so promotion/demotion (which bumps
+        the store's ``residency_epoch``) only re-derives the plan's
+        ``tier_split`` (a dict lookup per eager digest), never the plan.
         """
         rec = self.functions[name]
         plan = rec.plans.get(strategy)
         if plan is not None:
+            epoch = self.store.residency_epoch
+            if plan.residency_epoch != epoch:
+                plan.tier_split = self.store.residency(plan.eager_refs())
+                plan.residency_epoch = epoch
             return plan
         base = self.bases[rec.runtime]
         if strategy == "snapfaas":
@@ -154,17 +244,18 @@ class ZygoteRegistry:
                 raise ValueError(f"{name}: no working set; run generate_working_set")
             plan = build_restore_plan(
                 base, rec.diff, working_set=rec.ws,
-                strategy="snapfaas", function=name,
+                strategy="snapfaas", function=name, store=self.store,
             )
         elif strategy == "snapfaas-":
             plan = build_restore_plan(
                 base, rec.diff, working_set=None,
-                strategy="snapfaas-", function=name,
+                strategy="snapfaas-", function=name, store=self.store,
             )
         elif strategy == "reap":
             plan = build_restore_plan(
                 None, rec.full, working_set=rec.ws_full,
                 strategy="reap", function=name, use_pool=False,
+                store=self.store,
             )
         else:
             raise ValueError(f"no restore plan for strategy {strategy!r}")
@@ -180,6 +271,7 @@ class ZygoteRegistry:
         source_loader: Optional[Callable[[], Dict[Path, np.ndarray]]] = None,
         base_loader: Optional[Callable[[], Dict[Path, np.ndarray]]] = None,
         engine: Optional[str] = None,
+        promote: Optional[bool] = None,
     ) -> RestoredInstance:
         """Cold-start ``name`` with ``strategy``.
 
@@ -188,6 +280,9 @@ class ZygoteRegistry:
         zero-copy parallel scatter-reads) or "legacy" (the seed per-restore
         resolve + 3-copy batched read — kept as the benchmark baseline).
         Defaults to ``$REPRO_RESTORE_ENGINE`` or "planned".
+
+        ``promote`` is the tier hint: whether remote-fetched eager chunks
+        are promoted into the warm tiers (None → store default).
         """
         rec = self.functions[name]
         base = self.bases[rec.runtime]
@@ -199,7 +294,7 @@ class ZygoteRegistry:
             plan = self.restore_plan(name, strategy)
             return execute_restore_plan(
                 plan, self.store, pool if strategy != "reap" else None,
-                residual_init=residual_init,
+                residual_init=residual_init, promote=promote,
             )
         if strategy == "snapfaas":
             if rec.ws is None:
@@ -253,6 +348,12 @@ class ZygoteRegistry:
         shared = sum(
             ra.meta.nbytes for ra in resolved.values() if not ra.dirty_indices()
         )
+        # actual residency split of each strategy's eager set, so a
+        # TieredStorageModel prices B from where the bytes really live
+        tier_splits = {
+            key: self.store.residency(refs)
+            for key, refs in self._category_refs(name).items()
+        }
         return SnapshotSizes(
             full_bytes=rec.full.stored_bytes(),
             diff_bytes=diff_bytes,
@@ -266,6 +367,7 @@ class ZygoteRegistry:
             cow_faults=0,
             init_compute=rec.init_compute_s,
             residual_init=residual_init_s,
+            tier_splits=tier_splits,
         )
 
 

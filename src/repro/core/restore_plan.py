@@ -72,6 +72,18 @@ class RestorePlan:
     eager_bytes: int = 0
     eager_chunks: int = 0
     shared_bytes: int = 0
+    # tier placement of the eager set when built against a tiered store:
+    # {tier name: bytes} plus the store's residency epoch at build time —
+    # the registry rebuilds the plan when promotion/demotion moved chunks
+    tier_split: Dict[str, int] = field(default_factory=dict)
+    residency_epoch: int = -1
+
+    def eager_refs(self) -> List[ChunkRef]:
+        return [
+            ref
+            for pa in self.arrays
+            for _, ref in (*pa.eager, *pa.patch_eager)
+        ]
 
 
 def build_restore_plan(
@@ -82,6 +94,7 @@ def build_restore_plan(
     strategy: str,
     function: str = "",
     use_pool: bool = True,
+    store: Optional[ChunkStore] = None,
 ) -> RestorePlan:
     """Resolve layering and classify every chunk — once, off the hot path.
 
@@ -174,7 +187,7 @@ def build_restore_plan(
             patch_eager=tuple(patch_eager),
         ))
 
-    return RestorePlan(
+    plan = RestorePlan(
         function=function, strategy=strategy,
         base_id=base.snapshot_id if base else None,
         diff_id=diff.snapshot_id,
@@ -182,6 +195,12 @@ def build_restore_plan(
         eager_bytes=eager_bytes, eager_chunks=eager_chunks,
         shared_bytes=shared_bytes,
     )
+    # record where the eager set lives right now (tiered stores): the Eq. 1
+    # input for this plan, and the staleness stamp the registry checks
+    if store is not None and hasattr(store, "residency"):
+        plan.tier_split = store.residency(plan.eager_refs())
+        plan.residency_epoch = store.residency_epoch
+    return plan
 
 
 def execute_restore_plan(
@@ -190,12 +209,19 @@ def execute_restore_plan(
     pool: Optional[BasePool],
     *,
     residual_init: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None,
+    promote: Optional[bool] = None,
 ) -> RestoredInstance:
     """The cold-start hot path: allocate, scatter-read, done.
 
     Steps map to Eq. 1: A = buffer pre-allocation + device-state restore,
-    B = one parallel zero-copy scatter-read of every eager chunk,
+    B = one parallel tier-aware scatter-read of every eager chunk — on a
+    :class:`~repro.core.tiers.TieredChunkStore` the remote fetch, local
+    ``preadv`` and RAM memcpy streams run pipelined (overlapped), and the
+    per-tier outcome lands in the metrics,
     C = residual init, D = charged later by MaterializedArray.
+
+    ``promote`` forwards to the tiered store: whether remote-fetched chunks
+    are promoted downward (None → the store's configured default).
     """
     m = ColdStartMetrics(strategy=plan.strategy, function=plan.function)
     t = timer()
@@ -232,7 +258,19 @@ def execute_restore_plan(
     m.t_preconfig = t.lap()
 
     # B: one batched parallel scatter-read, straight into the buffers.
-    store.read_batch_into(dests)
+    # Tiered stores pipeline remote fetch / local preadv / RAM memcpy and
+    # report the per-tier split; flat stores take the plain path.
+    if hasattr(store, "tier_stats"):
+        from .tiers import TierReadStats
+
+        stats = TierReadStats()
+        store.read_batch_into(dests, stats=stats, promote=promote)
+        m.tier_chunks = stats.tier_chunks
+        m.tier_bytes = stats.tier_bytes
+        m.remote_fetch_s = stats.remote_fetch_s
+        m.promoted_bytes = stats.promoted_bytes
+    else:
+        store.read_batch_into(dests)
     m.t_eager = t.lap()
     m.eager_bytes = plan.eager_bytes
     m.eager_chunks = plan.eager_chunks

@@ -1,0 +1,770 @@
+"""Tiered chunk storage: RAM cache over local packs over a remote store.
+
+The paper's Eq. 1 charges eager restoration at ``bytes_unique / bw_store`` —
+but *which* ``bw_store`` depends on where the bytes live.  Real fleets
+restore from a hierarchy: a host-RAM chunk cache (~GB/s memcpy), local NVMe
+packs (the existing coalesced-``preadv`` engine), and a shared remote tier
+(an object store: high latency, throttled bandwidth, snapshots that were not
+born on this worker).  Prior snapshot systems get their wins from exactly
+this structure — record-and-prefetch across the hierarchy (REAP,
+arXiv:2101.09355) and loading only what the critical path needs (FaaSLight,
+arXiv:2207.08175).
+
+This module composes three :class:`StorageTier` implementations behind one
+:class:`TieredChunkStore` that is drop-in for :class:`ChunkStore`:
+
+* :class:`RamCacheTier`    — bounded, digest-keyed LRU byte cache; hits are
+  a single memcpy into the destination buffer; evictions are counted.
+* :class:`PackTier`        — today's local pack directory and zero-copy
+  scatter-read engine, unchanged.
+* :class:`RemoteTier`      — a second pack directory behind a configurable
+  latency/bandwidth throttle (shared-line model: concurrent fetches queue
+  on aggregate bandwidth, each request pays its own latency).
+
+``read_batch_into`` serves each destination from the warmest tier holding
+its digest, *pipelined*: remote fetches are issued first (the long pole),
+local coalesced ``preadv`` runs overlap them, RAM hits memcpy last, and the
+call completes when all three streams land.  Remote payloads are promoted
+downward (appended to a local promotion pack + inserted into the RAM cache)
+in the background so the next restore finds them warm.
+"""
+
+from __future__ import annotations
+
+import ctypes
+import os
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
+
+from .chunkstore import (
+    COALESCE_GAP,
+    _ZERO_DIGEST,
+    ChunkRef,
+    ChunkStore,
+    PackWriter,
+    _get_io_pool,
+)
+
+# RAM-tier reads above this size fan the memcpys across the I/O pool:
+# fresh destination buffers page-fault on first write, and parallel copies
+# absorb those faults the same way the preadv path does.
+_RAM_PARALLEL_BYTES = 4 * 1024 * 1024
+
+_fetch_pool: Optional[ThreadPoolExecutor] = None
+_fetch_lock = threading.Lock()
+
+
+def _get_fetch_pool() -> ThreadPoolExecutor:
+    global _fetch_pool
+    with _fetch_lock:
+        if _fetch_pool is None:
+            _fetch_pool = ThreadPoolExecutor(
+                max_workers=8, thread_name_prefix="tier-fetch"
+            )
+    return _fetch_pool
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    """Configuration of a worker's storage hierarchy."""
+
+    ram_bytes: int = 256 << 20          # RAM chunk-cache capacity (0 → off)
+    remote_root: Optional[str] = None   # default: <store root>/remote
+    remote_bw: float = 1.2e9            # bytes/s — simulated object store
+    remote_lat: float = 5e-3            # s per fetch request
+    promote_on_fetch: bool = True       # remote hits promote downward
+
+
+@dataclass
+class TierReadStats:
+    """Per-read outcome: which tier served how much (one restore's B phase)."""
+
+    tier_chunks: Dict[str, int] = field(default_factory=dict)
+    tier_bytes: Dict[str, int] = field(default_factory=dict)
+    remote_fetch_s: float = 0.0
+    promoted_bytes: int = 0
+
+    def add(self, tier: str, chunks: int, nbytes: int) -> None:
+        self.tier_chunks[tier] = self.tier_chunks.get(tier, 0) + chunks
+        self.tier_bytes[tier] = self.tier_bytes.get(tier, 0) + nbytes
+
+
+class StorageTier(Protocol):
+    """One level of the restore hierarchy that streams payloads from a
+    medium (pack file, remote link).
+
+    Stream tiers answer residency (``has``) and serve reads into
+    caller-provided buffers (``read_into``).  Movement between tiers
+    (promotion, demotion, prefetch) is orchestrated by
+    :class:`TieredChunkStore` — tiers stay dumb so new ones (e.g. a
+    peer-to-peer tier) slot in without touching the restore engine.  The
+    RAM cache deliberately sits outside this protocol: the composed store
+    grabs its payloads at classification time so a concurrent eviction can
+    never strand a read mid-flight.
+    """
+
+    name: str
+
+    def has(self, digest: str) -> bool:
+        ...
+
+    def read_into(self, items: Sequence[Tuple[ChunkRef, memoryview]]) -> int:
+        """Fill each destination view with its chunk's payload; returns
+        bytes read from this tier's medium."""
+        ...
+
+
+class RamCacheTier:
+    """Bounded digest-keyed LRU byte cache (the warmest tier).
+
+    Thread-safe.  ``put`` refuses payloads larger than the whole capacity
+    and evicts LRU entries (counted) until the new payload fits.
+    """
+
+    name = "ram"
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity = capacity_bytes
+        self._cache: "OrderedDict[str, bytes]" = OrderedDict()
+        self.used = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.hit_bytes = 0
+        self.evictions = 0
+        self.insertions = 0
+
+    def has(self, digest: str) -> bool:
+        with self._lock:
+            return digest in self._cache
+
+    def get(self, digest: str) -> Optional[bytes]:
+        with self._lock:
+            payload = self._cache.get(digest)
+            if payload is None:
+                return None
+            self._cache.move_to_end(digest)
+            self.hits += 1
+            self.hit_bytes += len(payload)
+            return payload
+
+    def put(self, digest: str, payload: bytes) -> bool:
+        n = len(payload)
+        if n > self.capacity:
+            return False
+        with self._lock:
+            if digest in self._cache:
+                self._cache.move_to_end(digest)
+                return True
+            while self.used + n > self.capacity and self._cache:
+                _, old = self._cache.popitem(last=False)
+                self.used -= len(old)
+                self.evictions += 1
+            self._cache[digest] = payload
+            self.used += n
+            self.insertions += 1
+            return True
+
+    def discard(self, digests: Iterable[str]) -> None:
+        with self._lock:
+            for d in digests:
+                old = self._cache.pop(d, None)
+                if old is not None:
+                    self.used -= len(old)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self.used = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "capacity_bytes": self.capacity,
+                "used_bytes": self.used,
+                "entries": len(self._cache),
+                "hits": self.hits,
+                "hit_bytes": self.hit_bytes,
+                "evictions": self.evictions,
+                "insertions": self.insertions,
+            }
+
+
+class PackTier:
+    """The local pack directory + coalesced-``preadv`` scatter-read engine."""
+
+    name = "local"
+
+    def __init__(self, store: ChunkStore):
+        self.store = store
+
+    def has(self, digest: str) -> bool:
+        return digest in self.store
+
+    def read_into(
+        self,
+        items: Sequence[Tuple[ChunkRef, memoryview]],
+        *,
+        parallel: bool = True,
+        coalesce_gap: int = COALESCE_GAP,
+    ) -> int:
+        return self.store.read_batch_into(
+            list(items), parallel=parallel, coalesce_gap=coalesce_gap
+        )
+
+
+class RemoteTier:
+    """Simulated object store: a second pack directory behind a throttle.
+
+    The throttle uses a shared-line model: a single lock-protected
+    ``line_free`` timestamp serializes aggregate bandwidth (concurrent
+    fetches queue their transfer time on the line), while each request
+    additionally pays its own ``lat`` before first byte — the behaviour of
+    a bandwidth-capped store link with per-request latency.
+    """
+
+    name = "remote"
+
+    def __init__(self, store: ChunkStore, *, bw: float, lat: float):
+        self.store = store
+        self.bw = bw
+        self.lat = lat
+        self._line_lock = threading.Lock()
+        self._line_free = 0.0
+        self.fetches = 0
+        self.fetched_bytes = 0
+        self.fetch_s = 0.0
+
+    def has(self, digest: str) -> bool:
+        return digest in self.store
+
+    def _throttle(self, nbytes: int, t_start: float) -> None:
+        """Sleep until the simulated transfer would have completed."""
+        with self._line_lock:
+            start = max(t_start, self._line_free)
+            done = start + (nbytes / self.bw if self.bw > 0 else 0.0)
+            self._line_free = done
+        deadline = done + self.lat
+        delay = deadline - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+
+    def read_into(self, items: Sequence[Tuple[ChunkRef, memoryview]]) -> int:
+        t0 = time.perf_counter()
+        n = self.store.read_batch_into(list(items))
+        self._throttle(n, t0)
+        dt = time.perf_counter() - t0
+        with self._line_lock:
+            self.fetches += 1
+            self.fetched_bytes += n
+            self.fetch_s += dt
+        return n
+
+    def stats(self) -> Dict[str, float]:
+        with self._line_lock:
+            return {
+                "bw_bytes_s": self.bw,
+                "lat_s": self.lat,
+                "fetches": self.fetches,
+                "fetched_bytes": self.fetched_bytes,
+                "fetch_s": round(self.fetch_s, 6),
+            }
+
+
+@dataclass
+class PrefetchStats:
+    """Outcome of one working-set prefetch (registration / shard assignment)."""
+
+    prefetched_bytes: int = 0
+    prefetched_chunks: int = 0
+    remote_bytes: int = 0       # bytes that had to cross the remote link
+    remote_fetch_s: float = 0.0
+    already_warm: int = 0       # chunks already RAM-resident
+
+
+class TieredChunkStore:
+    """RAM / local-pack / remote hierarchy behind the ``ChunkStore`` API.
+
+    Writes (snapshot capture) land in the local pack tier, exactly as
+    before.  Reads are served per-tier — see module docstring.  The store
+    tracks a ``residency_epoch`` that bumps on any tier movement (promotion,
+    demotion, prefetch, RAM clear) so cached restore plans and Eq. 1
+    prediction tables know when their placement assumptions went stale.
+    """
+
+    def __init__(self, root: str, *, spec: Optional[TierSpec] = None):
+        self.root = root
+        self.spec = spec or TierSpec()
+        self.local = ChunkStore(root)
+        self.pack = PackTier(self.local)
+        self.ram = RamCacheTier(self.spec.ram_bytes)
+        remote_root = self.spec.remote_root or os.path.join(root, "remote")
+        self._remote_root = remote_root
+        self._remote: Optional[RemoteTier] = None
+        if os.path.isdir(os.path.join(remote_root, "packs")):
+            self._remote = self._make_remote()
+        self._lock = threading.Lock()
+        self._promote_pack: Optional[PackWriter] = None
+        self._promote_seq = 0
+        self._promote_futures: List[Future] = []
+        self.promoted_bytes = 0
+        self.promoted_chunks = 0
+        self.demoted_bytes = 0
+        self.prefetched_bytes = 0
+        self.prefetch_fetch_s = 0.0
+        self.residency_epoch = 0
+
+    # ------------------------------------------------------------ tier admin
+
+    def _make_remote(self) -> RemoteTier:
+        return RemoteTier(
+            ChunkStore(self._remote_root),
+            bw=self.spec.remote_bw, lat=self.spec.remote_lat,
+        )
+
+    @property
+    def remote(self) -> RemoteTier:
+        """The remote tier (created on first use — demotion or a
+        pre-populated ``remote_root``)."""
+        with self._lock:
+            if self._remote is None:
+                self._remote = self._make_remote()
+            return self._remote
+
+    @property
+    def has_remote(self) -> bool:
+        return self._remote is not None
+
+    def tier_of(self, digest: str) -> Optional[str]:
+        """Warmest tier holding ``digest`` (None → unknown digest)."""
+        if self.ram.has(digest):
+            return "ram"
+        if digest in self.local:
+            return "local"
+        if self._remote is not None and self._remote.has(digest):
+            return "remote"
+        return None
+
+    def residency(self, refs: Sequence[ChunkRef]) -> Dict[str, int]:
+        """Bytes of ``refs`` resident per tier (zero chunks excluded; each
+        digest counted once — this is the planner's Eq. 1 input)."""
+        split: Dict[str, int] = {}
+        seen = set()
+        for ref in refs:
+            if ref.zero or ref.digest in seen:
+                continue
+            seen.add(ref.digest)
+            tier = self.tier_of(ref.digest)
+            if tier is not None:
+                split[tier] = split.get(tier, 0) + ref.size
+        return split
+
+    def _bump_epoch(self) -> None:
+        with self._lock:
+            self.residency_epoch += 1
+
+    # -------------------------------------------------- movement: demote/up
+
+    def demote(self, refs: Sequence[ChunkRef]) -> int:
+        """Move chunks to the remote tier (simulating snapshots born
+        elsewhere): payloads are copied into a remote pack, then forgotten
+        by the local index and RAM cache.  Returns bytes demoted."""
+        remote = self.remote
+        payloads: List[bytes] = []
+        move: List[ChunkRef] = []
+        seen = set()
+        for ref in refs:
+            if ref.zero or ref.digest in seen:
+                continue
+            seen.add(ref.digest)
+            if ref.digest not in self.local or remote.has(ref.digest):
+                continue
+            payloads.append(self.local.get_chunk(ref))
+            move.append(ref)
+        if not move:
+            return 0
+        with self._lock:
+            self._promote_seq += 1
+            pack_id = f"demote-{self._promote_seq:06d}"
+        pack = remote.store.open_pack(pack_id)
+        remote.store.put_chunks(pack, payloads, refs=move)
+        pack.close()
+        remote.store.save_index()
+        self.local.forget([r.digest for r in move])
+        self.local.save_index()
+        self.ram.discard([r.digest for r in move])
+        moved = sum(len(p) for p in payloads)
+        self.demoted_bytes += moved
+        self._bump_epoch()
+        return moved
+
+    def _promote_payloads(
+        self, pairs: Sequence[Tuple[ChunkRef, bytes]], *, to_ram: bool = True
+    ) -> int:
+        """Append remote-fetched payloads to the local promotion pack and
+        (optionally) the RAM cache.  Runs off the restore's critical path.
+
+        Order matters: payloads are appended and **flushed** before their
+        index entries are published — an indexed digest is instantly
+        readable by concurrent scatter-reads, which would otherwise
+        ``preadv`` past the buffered (unflushed) tail of the pack."""
+        fresh = [(r, p) for r, p in pairs if r.digest not in self.local]
+        if to_ram:
+            for ref, payload in pairs:
+                self.ram.put(ref.digest, payload)
+        if fresh:
+            with self._lock:
+                if self._promote_pack is None:
+                    self._promote_seq += 1
+                    self._promote_pack = self.local.open_pack(
+                        f"promote-{self._promote_seq:06d}"
+                    )
+                entries = [
+                    (r.digest, self._promote_pack.append(p)) for r, p in fresh
+                ]
+                self._promote_pack.flush()
+                self.local.register_chunks(entries)
+                self.promoted_chunks += len(fresh)
+                self.promoted_bytes += sum(len(p) for _, p in fresh)
+            self._bump_epoch()
+        return sum(len(p) for _, p in fresh)
+
+    def _track_promotion(self, future: Future) -> None:
+        """Retain a background-promotion future, pruning completed ones so
+        the list stays bounded on long-running serve paths."""
+        with self._lock:
+            self._promote_futures = [
+                f for f in self._promote_futures if not f.done()
+            ]
+            self._promote_futures.append(future)
+
+    def join_promotions(self) -> None:
+        """Wait for background promotions (tests / orderly shutdown)."""
+        with self._lock:
+            futures, self._promote_futures = self._promote_futures, []
+        for f in futures:
+            f.result()
+
+    def prefetch(
+        self, refs: Sequence[ChunkRef], *, to_ram: bool = True
+    ) -> PrefetchStats:
+        """Pull a working set into the warm tiers ahead of restores.
+
+        Remote-resident chunks cross the throttled link once (and are
+        promoted to local packs); local chunks are optionally lifted into
+        the RAM cache.  This is the registration/shard-assignment step —
+        deliberately off the cold-start critical path.
+        """
+        stats = PrefetchStats()
+        remote_items: List[Tuple[ChunkRef, bytes]] = []
+        fetch: List[ChunkRef] = []
+        lift_ram = to_ram and self.ram.capacity > 0
+        seen = set()
+        for ref in refs:
+            if ref.zero or ref.digest in seen:
+                continue
+            seen.add(ref.digest)
+            if self.ram.has(ref.digest):
+                stats.already_warm += 1
+                continue
+            if ref.digest in self.local:
+                # local chunks only move if the RAM tier can actually take
+                # them — with RAM disabled they are already as warm as the
+                # hierarchy gets, so don't pay (or count) a pointless read
+                if lift_ram:
+                    payload = self.local.get_chunk(ref)
+                    if self.ram.put(ref.digest, payload):
+                        stats.prefetched_bytes += ref.size
+                        stats.prefetched_chunks += 1
+                continue
+            fetch.append(ref)
+        if fetch:
+            remote = self.remote
+            bufs = [bytearray(r.size) for r in fetch]
+            t0 = time.perf_counter()
+            remote.read_into(
+                [(r, memoryview(b)) for r, b in zip(fetch, bufs)]
+            )
+            stats.remote_fetch_s = time.perf_counter() - t0
+            remote_items = [(r, bytes(b)) for r, b in zip(fetch, bufs)]
+            self._promote_payloads(remote_items, to_ram=to_ram)
+            stats.remote_bytes = sum(r.size for r in fetch)
+            stats.prefetched_bytes += stats.remote_bytes
+            stats.prefetched_chunks += len(fetch)
+        if stats.prefetched_chunks:
+            self._bump_epoch()
+        self.prefetched_bytes += stats.prefetched_bytes
+        self.prefetch_fetch_s += stats.remote_fetch_s
+        return stats
+
+    # ------------------------------------------------------------ write path
+
+    def open_pack(self, pack_id: str) -> PackWriter:
+        return self.local.open_pack(pack_id)
+
+    def put_chunks(self, pack, payloads, refs=None):
+        return self.local.put_chunks(pack, payloads, refs=refs)
+
+    def save_index(self) -> None:
+        self.local.save_index()
+        if self._remote is not None:
+            self._remote.store.save_index()
+
+    # ------------------------------------------------------------- read path
+
+    def __contains__(self, digest: str) -> bool:
+        return digest == _ZERO_DIGEST or self.tier_of(digest) is not None
+
+    def location(self, digest: str):
+        """Physical location in whichever pack tier holds the digest
+        (local wins; promoted chunks exist in both)."""
+        if digest in self.local:
+            return self.local.location(digest)
+        if self._remote is not None and self._remote.has(digest):
+            return self._remote.store.location(digest)
+        return self.local.location(digest)  # consistent KeyError
+
+    def _remote_only_digests(self) -> List[str]:
+        if self._remote is None:
+            return []
+        return [d for d in self._remote.store.digests()
+                if d not in self.local]
+
+    @property
+    def num_chunks(self) -> int:
+        # union across pack tiers: a promoted chunk lives in both but is
+        # one logical chunk
+        return self.local.num_chunks + len(self._remote_only_digests())
+
+    def stored_bytes(self) -> int:
+        total = self.local.stored_bytes()
+        if self._remote is not None:
+            rs = self._remote.store
+            total += sum(rs.location(d).size
+                         for d in self._remote_only_digests())
+        return total
+
+    def get_chunk(self, ref: ChunkRef) -> bytes:
+        """Single-chunk (demand-fault) read: warmest tier wins; remote
+        faults pay the throttle and promote downward."""
+        if ref.zero:
+            return b"\x00" * ref.size
+        payload = self.ram.get(ref.digest)
+        if payload is not None:
+            return payload
+        if ref.digest in self.local:
+            payload = self.local.get_chunk(ref)
+            self.ram.put(ref.digest, payload)
+            return payload
+        if self._remote is not None and self._remote.has(ref.digest):
+            buf = bytearray(ref.size)
+            self._remote.read_into([(ref, memoryview(buf))])
+            payload = bytes(buf)
+            if self.spec.promote_on_fetch:
+                # off the faulting request's critical path, like the batch
+                # promotion — the D phase pays the remote link, not the
+                # pack append/flush
+                self._track_promotion(_get_fetch_pool().submit(
+                    self._promote_payloads, [(ref, payload)]
+                ))
+            return payload
+        raise KeyError(ref.digest)
+
+    def read_batch(self, refs: Sequence[ChunkRef]) -> Dict[str, bytes]:
+        """Legacy digest→payload batched read, tier-aware."""
+        out: Dict[str, bytes] = {}
+        local_refs: List[ChunkRef] = []
+        for ref in refs:
+            if ref.zero or ref.digest in out:
+                continue
+            payload = self.ram.get(ref.digest)
+            if payload is not None:
+                out[ref.digest] = payload
+            elif ref.digest in self.local:
+                local_refs.append(ref)
+            else:
+                out[ref.digest] = self.get_chunk(ref)  # remote (throttled)
+        if local_refs:
+            out.update(self.local.read_batch(local_refs))
+        return out
+
+    def read_batch_into(
+        self,
+        dests: Sequence[Tuple[ChunkRef, memoryview]],
+        *,
+        parallel: bool = True,
+        coalesce_gap: int = COALESCE_GAP,
+        stats: Optional[TierReadStats] = None,
+        promote: Optional[bool] = None,
+    ) -> int:
+        """Tier-aware pipelined scatter-read.
+
+        Remote fetches launch first (the bandwidth-throttled long pole),
+        the local coalesced-``preadv`` engine runs concurrently with them,
+        and RAM hits memcpy while both are in flight.  Remote payloads are
+        promoted downward in the background (unless ``promote=False``).
+        Returns bytes read across all tiers.
+        """
+        if promote is None:
+            promote = self.spec.promote_on_fetch
+        primary: Dict[str, memoryview] = {}
+        dup: List[Tuple[str, memoryview]] = []
+        ram_items: List[Tuple[ChunkRef, memoryview, bytes]] = []
+        local_items: List[Tuple[ChunkRef, memoryview]] = []
+        remote_items: List[Tuple[ChunkRef, memoryview]] = []
+        for ref, buf in dests:
+            if ref.zero:
+                continue
+            view = memoryview(buf)
+            if view.ndim != 1 or view.itemsize != 1:
+                view = view.cast("B")
+            if len(view) != ref.size:
+                raise ValueError(
+                    f"dest for {ref.digest} has {len(view)} bytes, "
+                    f"want {ref.size}"
+                )
+            if ref.digest in primary:
+                dup.append((ref.digest, view))
+                continue
+            primary[ref.digest] = view
+            # classification grabs the RAM payload immediately so a
+            # concurrent eviction cannot strand the read
+            payload = self.ram.get(ref.digest)
+            if payload is not None:
+                ram_items.append((ref, view, payload))
+            elif ref.digest in self.local:
+                local_items.append((ref, view))
+            elif self._remote is not None and self._remote.has(ref.digest):
+                remote_items.append((ref, view))
+            else:
+                raise KeyError(ref.digest)
+
+        total = 0
+        remote_future: Optional[Future] = None
+        t_remote = 0.0
+        local_fallback = False
+        if remote_items:
+            remote = self.remote
+            remote_future = _get_fetch_pool().submit(
+                remote.read_into, remote_items
+            )
+            t_remote = time.perf_counter()
+        if local_items:
+            try:
+                total += self.pack.read_into(
+                    local_items, parallel=parallel, coalesce_gap=coalesce_gap
+                )
+            except KeyError:
+                # a concurrent demote() moved chunks between classification
+                # and the read — re-classify and re-dispatch the batch
+                # through the full hierarchy (idempotent: overwrites any
+                # partial fills; keeps batching, promote and stats honest)
+                local_fallback = True
+                total += self.read_batch_into(
+                    local_items, parallel=parallel,
+                    coalesce_gap=coalesce_gap, stats=stats, promote=promote,
+                )
+        ram_bytes = sum(len(p) for _, _, p in ram_items)
+        if parallel and ram_bytes > _RAM_PARALLEL_BYTES and len(ram_items) > 1:
+            # ctypes.memmove releases the GIL, so fanned-out copies overlap
+            # the page faults fresh destination buffers take on first write
+            # (memoryview slice-assign holds the GIL and cannot)
+            nshards = min(8, len(ram_items))
+            shards = [ram_items[i::nshards] for i in range(nshards)]
+
+            def _copy(shard):
+                for _, view, payload in shard:
+                    ctypes.memmove(
+                        ctypes.addressof(ctypes.c_char.from_buffer(view)),
+                        payload, len(payload),
+                    )
+
+            list(_get_io_pool().map(_copy, shards))
+        else:
+            for _, view, payload in ram_items:
+                view[:] = payload
+        total += ram_bytes
+        promoting_bytes = 0
+        if remote_future is not None:
+            total += remote_future.result()
+            t_remote = time.perf_counter() - t_remote
+            if promote:
+                pairs = [
+                    (ref, bytes(view)) for ref, view in remote_items
+                ]
+                # what promotion will actually append (racing promotions of
+                # the same digests may shrink this further; close enough
+                # for per-restore accounting)
+                promoting_bytes = sum(
+                    r.size for r, _ in pairs if r.digest not in self.local
+                )
+                self._track_promotion(
+                    _get_fetch_pool().submit(self._promote_payloads, pairs)
+                )
+        for digest, view in dup:
+            view[:] = primary[digest]
+        if stats is not None:
+            if ram_items:
+                stats.add("ram", len(ram_items),
+                          sum(len(p) for _, _, p in ram_items))
+            if local_items and not local_fallback:
+                stats.add("local", len(local_items),
+                          sum(r.size for r, _ in local_items))
+            if remote_items:
+                stats.add("remote", len(remote_items),
+                          sum(r.size for r, _ in remote_items))
+                stats.remote_fetch_s += t_remote
+                stats.promoted_bytes += promoting_bytes
+        return total
+
+    # ------------------------------------------------------------- lifecycle
+
+    def close(self) -> None:
+        self.join_promotions()
+        with self._lock:
+            if self._promote_pack is not None:
+                self._promote_pack.close()
+                self._promote_pack = None
+        self.local.save_index()
+        self.local.close()
+        if self._remote is not None:
+            self._remote.store.close()
+
+    def drop_page_cache(self, *, clear_ram: bool = True) -> None:
+        """Benchmark hygiene: evict pack pages from the OS page cache (both
+        pack directories) and, by default, empty the RAM tier — a measured
+        cold start then hits the storage media.  Pass ``clear_ram=False``
+        to measure RAM-tier-warm restores."""
+        self.join_promotions()
+        with self._lock:
+            if self._promote_pack is not None:
+                self._promote_pack.close()
+                self._promote_pack = None
+        self.local.drop_page_cache()
+        if self._remote is not None:
+            self._remote.store.drop_page_cache()
+        if clear_ram and self.ram.capacity:
+            self.ram.clear()
+            self._bump_epoch()
+
+    def tier_stats(self) -> Dict[str, object]:
+        """Counters for fleet metrics (Cluster.metrics → replay driver)."""
+        out: Dict[str, object] = {
+            "ram": self.ram.stats(),
+            "local": {
+                "chunks": self.local.num_chunks,
+                "stored_bytes": self.local.stored_bytes(),
+            },
+            "promoted_bytes": self.promoted_bytes,
+            "promoted_chunks": self.promoted_chunks,
+            "demoted_bytes": self.demoted_bytes,
+            "prefetched_bytes": self.prefetched_bytes,
+            "prefetch_fetch_s": round(self.prefetch_fetch_s, 6),
+            "residency_epoch": self.residency_epoch,
+        }
+        if self._remote is not None:
+            out["remote"] = self._remote.stats()
+        return out

@@ -85,17 +85,28 @@ def select_strategy(
 
 @dataclass(frozen=True)
 class ColdStartOptions:
-    """How a cold start (if one happens) should run."""
+    """How a cold start (if one happens) should run.
+
+    The tier hints steer the storage hierarchy: ``prefetch`` forces a
+    working-set promotion into the warm tiers (RAM cache + local packs)
+    before the boot is timed — what the scheduler does on shard
+    assignment — and ``promote`` controls whether remote-fetched eager
+    chunks are promoted downward as a side effect of this restore
+    (``None`` → the store's configured default).  ``promote`` covers the
+    eager B phase only; execution-time demand faults always follow the
+    store's ``promote_on_fetch`` default.
+    """
 
     strategy: Strategy = Strategy.SNAPFAAS
     force_cold: bool = False            # bypass the warm pool (bench/measure)
     engine: Optional[str] = None        # "planned" | "legacy" | None (env default)
+    prefetch: bool = False              # promote the WS to warm tiers first
+    promote: Optional[bool] = None      # remote fetches promote downward
 
     def with_strategy(self, strategy: "Strategy | str") -> "ColdStartOptions":
-        return ColdStartOptions(
-            strategy=Strategy.coerce(strategy),
-            force_cold=self.force_cold, engine=self.engine,
-        )
+        import dataclasses
+
+        return dataclasses.replace(self, strategy=Strategy.coerce(strategy))
 
 
 @dataclass(frozen=True)

@@ -26,6 +26,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence
 import numpy as np
 
 from repro.core.planner import PAPER_C220G5, StorageModel
+from repro.core.tiers import TierSpec
 from repro.models import Model
 from repro.serving.api import InvocationRequest, InvocationResult
 from repro.serving.policy import PoolPolicy
@@ -56,6 +57,8 @@ class Cluster:
         policy_factory: Optional[Callable[[], PoolPolicy]] = None,
         storage: StorageModel = PAPER_C220G5,
         max_concurrency: Optional[int] = None,
+        tiers: Optional[TierSpec] = None,
+        prefetch_on_register: bool = True,
     ):
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
@@ -67,6 +70,8 @@ class Cluster:
                 pool_policy=policy_factory() if policy_factory else None,
                 storage=storage,
                 worker_id=i,
+                tiers=tiers,
+                prefetch_on_register=prefetch_on_register,
             )
             for i in range(n_workers)
         ]
@@ -90,10 +95,20 @@ class Cluster:
             w.register_runtime(family, model, base_params)
 
     def register_function(self, spec: FunctionSpec) -> Worker:
-        """Register ``spec`` on its home shard; returns the owning worker."""
+        """Register ``spec`` on its home shard; returns the owning worker.
+
+        Registration on the owning worker also promotes the function's
+        working set into that worker's warm tiers (RAM chunk cache + local
+        packs) — the shard-assignment prefetch, so even a first request
+        against a remote-born snapshot restores from warm storage."""
         w = self.worker_for(spec.name)
         w.register_function(spec)
         return w
+
+    def prefetch_function(self, fn: str):
+        """Re-run the WS prefetch on ``fn``'s owning worker (e.g. after its
+        warm tiers were dropped, or after a shard reassignment)."""
+        return self.worker_for(fn).prefetch_function(fn)
 
     def worker_for(self, fn: str) -> Worker:
         return self.workers[_shard_of(fn, len(self.workers))]
@@ -164,6 +179,7 @@ class Cluster:
                 "worker_id": w.worker_id,
                 "functions": sorted(w.specs),
                 "pool": w.pool.stats(),
+                "tiers": w.tier_stats(),
             })
         pools = [w.pool for w in self.workers]
         hits = sum(p.hits for p in pools)
@@ -171,6 +187,27 @@ class Cluster:
         with self._results_lock:
             n_req, n_cold = self.n_requests, self.n_cold
             queue_total = self.queue_s_total
+        # fleet view of the storage hierarchy: what the warm tiers absorbed
+        # and what the remote link cost (the replay driver reports these) —
+        # reuse the per-worker snapshots so both views are consistent
+        tier_stats = [pw["tiers"] for pw in per_worker]
+        ram_hits = sum(t["ram"]["hits"] for t in tier_stats)
+        ram_hit_bytes = sum(t["ram"]["hit_bytes"] for t in tier_stats)
+        ram_evictions = sum(t["ram"]["evictions"] for t in tier_stats)
+        remote = [t["remote"] for t in tier_stats if "remote" in t]
+        tiers = {
+            "ram_hits": ram_hits,
+            "ram_hit_bytes": ram_hit_bytes,
+            "ram_evictions": ram_evictions,
+            "promoted_bytes": sum(t["promoted_bytes"] for t in tier_stats),
+            "demoted_bytes": sum(t["demoted_bytes"] for t in tier_stats),
+            "prefetched_bytes": sum(t["prefetched_bytes"] for t in tier_stats),
+            "prefetch_fetch_s": round(
+                sum(t["prefetch_fetch_s"] for t in tier_stats), 6),
+            "remote_fetches": sum(r["fetches"] for r in remote),
+            "remote_fetched_bytes": sum(r["fetched_bytes"] for r in remote),
+            "remote_fetch_s": round(sum(r["fetch_s"] for r in remote), 6),
+        }
         return {
             "n_workers": len(self.workers),
             "n_requests": n_req,
@@ -187,6 +224,7 @@ class Cluster:
                 "warm_hit_rate": round(hits / (hits + misses), 4)
                                  if hits + misses else 0.0,
             },
+            "tiers": tiers,
             "per_worker": per_worker,
         }
 

@@ -9,8 +9,8 @@ restored params — demand-paged leaves materialize the moment the request
 path first touches them, exactly like REAP's runtime page faults.
 
 The request path is typed (``Worker.invoke(InvocationRequest)``); the
-legacy string-typed ``Worker.handle(fn, tokens, strategy=..., ...)`` is a
-deprecation shim for one release (see DESIGN.md migration notes).
+legacy string-typed ``Worker.handle`` shim was removed after its promised
+one-release deprecation window (see DESIGN.md migration notes).
 """
 
 from __future__ import annotations
@@ -18,7 +18,6 @@ from __future__ import annotations
 import os
 import threading
 import time
-import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -28,12 +27,12 @@ import numpy as np
 
 from repro.core import AccessLog, ColdStartMetrics, RestoredInstance, ZygoteRegistry
 from repro.core.planner import PAPER_C220G5, StorageModel
+from repro.core.tiers import PrefetchStats, TierSpec
 from repro.core.restore import MaterializedArray
 from repro.core.snapshot import flatten_pytree, resolve
 from repro.kernels.snapshot_patch import patch_apply_op
 from repro.models import Batch, Model
 from repro.serving.api import (
-    ColdStartOptions,
     InvocationRequest,
     InvocationResult,
     NpzSourceResolver,
@@ -73,11 +72,15 @@ class Worker:
                  chunk_bytes: int = 64 * 1024,
                  pool_policy: Optional[PoolPolicy] = None,
                  storage: StorageModel = PAPER_C220G5,
-                 worker_id: int = 0):
-        self.registry = ZygoteRegistry(root, chunk_bytes=chunk_bytes)
+                 worker_id: int = 0,
+                 tiers: Optional[TierSpec] = None,
+                 prefetch_on_register: bool = True):
+        self.registry = ZygoteRegistry(root, chunk_bytes=chunk_bytes,
+                                       tiers=tiers)
         self.pool = InstancePool(pool_budget_bytes, policy=pool_policy)
         self.storage = storage              # deployment tier for Eq. 1 (AUTO)
         self.worker_id = worker_id
+        self.prefetch_on_register = prefetch_on_register
         self.models: Dict[str, Model] = {}
         self.specs: Dict[str, FunctionSpec] = {}
         self._fwd: Dict[str, callable] = {}
@@ -142,11 +145,26 @@ class Worker:
         t0 = time.perf_counter()
         spec.resolver.load_source()
         rec.init_compute_s = time.perf_counter() - t0
+        # shard-assignment prefetch: promote the function's WS into this
+        # worker's warm tiers (RAM cache + local packs) so its first cold
+        # start never pays the cold-tier read (REAP's record-and-prefetch,
+        # applied across the storage hierarchy)
+        if self.prefetch_on_register:
+            self.prefetch_function(spec.name)
         # precompute the Eq. 1 table here, NOT on the first request — the
         # request path must never pay a planning pass inside its timed window
         with self._lock:
             self._auto.pop(spec.name, None)
         self._auto_entry(spec.name)
+
+    def prefetch_function(self, fn: str) -> PrefetchStats:
+        """Promote ``fn``'s working set into the warm tiers now (used at
+        registration / shard assignment, and by the ``prefetch`` tier hint)."""
+        return self.registry.prefetch_working_set(fn)
+
+    def tier_stats(self) -> Dict[str, Any]:
+        """This worker's storage-hierarchy counters (fleet metrics)."""
+        return self.registry.store.tier_stats()
 
     def _default_resolver(self, spec: FunctionSpec) -> NpzSourceResolver:
         pool = self.registry.pools[spec.family]
@@ -163,17 +181,20 @@ class Worker:
     # -- planner glue (Strategy.AUTO) ----------------------------------------
 
     def _auto_entry(self, fn: str):
-        """Cached (ws, best strategy, prediction table) for ``fn``; rebuilt
-        whenever the registry's working set object changed (e.g. a direct
-        ``generate_working_set`` call — the registry clears its restore
-        plans for the same reason)."""
+        """Cached (ws, best strategy, prediction table, residency epoch)
+        for ``fn``; rebuilt whenever the registry's working set object
+        changed (e.g. a direct ``generate_working_set`` call — the registry
+        clears its restore plans for the same reason) or tier movement
+        (promotion/demotion/prefetch) shifted the eager set's residency
+        split that a TieredStorageModel prices."""
         rec = self.registry.functions[fn]
+        epoch = self.registry.store.residency_epoch
         with self._lock:
             entry = self._auto.get(fn)
-            if entry is None or entry[0] is not rec.ws:
+            if entry is None or entry[0] is not rec.ws or entry[3] != epoch:
                 best, preds = select_strategy(self.registry.sizes(fn),
                                               self.storage)
-                entry = (rec.ws, best, preds)
+                entry = (rec.ws, best, preds, epoch)
                 self._auto[fn] = entry
             return entry
 
@@ -188,7 +209,7 @@ class Worker:
 
     def predicted_cost(self, fn: str, strategy: Strategy) -> float:
         """Predicted re-cold-start latency (s) — the GDSF residency cost."""
-        _, best, preds = self._auto_entry(fn)
+        _, best, preds, _ = self._auto_entry(fn)
         pred = preds.get(Strategy.coerce(strategy))
         return pred.total if pred is not None else preds[best].total
 
@@ -278,6 +299,11 @@ class Worker:
         opts = request.options
         spec = self.specs[fn]
         strategy = self.resolve_strategy(fn, opts.strategy)
+        if opts.prefetch:
+            # scheduler-style WS promotion into the warm tiers; deliberately
+            # ahead of the timed window (the hint models a prefetch that
+            # overlapped request arrival, e.g. on shard assignment)
+            self.prefetch_function(fn)
         t0 = time.perf_counter()
         inst = None if opts.force_cold else self.pool.get(fn)
         cold = inst is None
@@ -288,6 +314,7 @@ class Worker:
                 fn, strategy.value,
                 residual_init=lambda ds: {**ds, "kv_ready": True},
                 engine=opts.engine,
+                promote=opts.promote,
                 **loaders,
             )
         boot = time.perf_counter() - t0
@@ -320,30 +347,6 @@ class Worker:
             metrics=inst.metrics if cold else None,
             output=np.asarray(logits[:, -1, :8]),
         )
-
-    def handle(
-        self,
-        fn: str,
-        tokens: np.ndarray,
-        *,
-        strategy: "Strategy | str" = Strategy.SNAPFAAS,
-        force_cold: bool = False,
-        engine: Optional[str] = None,
-    ) -> InvocationResult:
-        """Deprecated shim over :meth:`invoke` (one release; see DESIGN.md)."""
-        warnings.warn(
-            "Worker.handle(fn, tokens, strategy=..., force_cold=..., "
-            "engine=...) is deprecated; build an InvocationRequest and call "
-            "Worker.invoke / Cluster.submit instead",
-            DeprecationWarning, stacklevel=2,
-        )
-        return self.invoke(InvocationRequest(
-            function=fn, tokens=np.asarray(tokens),
-            options=ColdStartOptions(
-                strategy=Strategy.coerce(strategy),
-                force_cold=force_cold, engine=engine,
-            ),
-        ))
 
     def _loaders(self, spec: FunctionSpec):
         """Registry-facing adapters over the spec's declared SourceResolver

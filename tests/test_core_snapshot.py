@@ -67,6 +67,50 @@ class TestChunkStore:
         store2 = ChunkStore(root)
         assert store2.get_chunk(refs[0]) == b"persist me" * 50
 
+    def test_index_save_is_atomic(self, tmp_path):
+        """save_index goes through a temp file + os.replace: no .tmp debris
+        survives and the on-disk index is always complete JSON."""
+        import json
+        import os
+
+        root = str(tmp_path / "s")
+        store = ChunkStore(root)
+        pack = store.open_pack("p0")
+        store.put_chunks(pack, [b"a" * 5000, b"b" * 5000])
+        pack.close()
+        store.save_index()
+        assert not os.path.exists(os.path.join(root, "index.json.tmp"))
+        with open(os.path.join(root, "index.json")) as f:
+            assert len(json.load(f)) == 2
+
+    def test_corrupt_index_detected(self, tmp_path):
+        """A truncated/garbled index.json must raise a descriptive error,
+        not silently start an empty store over existing packs."""
+        import os
+
+        from repro.core import IndexCorruptionError
+
+        root = str(tmp_path / "s")
+        store = ChunkStore(root)
+        pack = store.open_pack("p0")
+        store.put_chunks(pack, [b"x" * 9000])
+        pack.close()
+        store.save_index()
+        path = os.path.join(root, "index.json")
+        with open(path) as f:
+            blob = f.read()
+        for corrupt in (blob[: len(blob) // 2], "{not json", ""):
+            with open(path, "w") as f:
+                f.write(corrupt)
+            with pytest.raises(IndexCorruptionError, match="index.json"):
+                ChunkStore(root)
+        # wrong shape (valid JSON, bogus entries) is corruption too
+        for bogus in ('{"digest": "not-a-location"}', '{"digest": {}}'):
+            with open(path, "w") as f:
+                f.write(bogus)
+            with pytest.raises(IndexCorruptionError):
+                ChunkStore(root)
+
 
 # ----------------------------------------------------------------- snapshots
 

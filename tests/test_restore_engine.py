@@ -335,19 +335,22 @@ class TestDevicePatch:
                 variant[k] = variant[k] + 0.01
         spec = FunctionSpec(name="fn", family="t", variant=variant)
         worker.register_function(spec)
+        from repro.serving import ColdStartOptions, InvocationRequest, Strategy
+
         toks = request_tokens(spec, np.random.default_rng(0), cfg.vocab_size,
                               seq=8)
-        r_planned = worker.handle("fn", toks, strategy="snapfaas",
-                                  force_cold=True)
+
+        def cold(engine=None):
+            return worker.invoke(InvocationRequest(
+                function="fn", tokens=toks,
+                options=ColdStartOptions(strategy=Strategy.SNAPFAAS,
+                                         force_cold=True, engine=engine),
+            ))
+
+        r_planned = cold()
         inst = worker.pool.get("fn")
         assert any(a._dev is not None for a in inst.arrays.values()), \
             "device patch path did not fire"
-        import os
-        os.environ["REPRO_RESTORE_ENGINE"] = "legacy"
-        try:
-            r_legacy = worker.handle("fn", toks, strategy="snapfaas",
-                                     force_cold=True)
-        finally:
-            del os.environ["REPRO_RESTORE_ENGINE"]
+        r_legacy = cold(engine="legacy")
         np.testing.assert_allclose(r_planned.output, r_legacy.output,
                                    rtol=1e-5, atol=1e-6)

@@ -138,6 +138,16 @@ class TestTrainer:
 
 # ------------------------------------------------------------------ serving
 
+def _invoke(worker, fn, tokens, *, strategy="snapfaas", force_cold=False):
+    from repro.serving import ColdStartOptions, InvocationRequest, Strategy
+
+    return worker.invoke(InvocationRequest(
+        function=fn, tokens=np.asarray(tokens),
+        options=ColdStartOptions(strategy=Strategy.coerce(strategy),
+                                 force_cold=force_cold),
+    ))
+
+
 class TestServing:
     @pytest.fixture(scope="class")
     def worker_and_specs(self, tmp_path_factory):
@@ -156,7 +166,7 @@ class TestServing:
         outs = {}
         for strat in ("regular", "reap", "seuss", "snapfaas-", "snapfaas"):
             toks = request_tokens(specs[0], np.random.default_rng(7), cfg.vocab_size)
-            r = worker.handle(specs[0].name, toks, strategy=strat, force_cold=True)
+            r = _invoke(worker, specs[0].name, toks, strategy=strat, force_cold=True)
             outs[strat] = r.output
         ref = outs["regular"]
         for strat, o in outs.items():
@@ -167,8 +177,8 @@ class TestServing:
         (worker, specs), cfg = worker_and_specs
         from repro.serving.trace import request_tokens
         toks = request_tokens(specs[1], np.random.default_rng(3), cfg.vocab_size)
-        r1 = worker.handle(specs[1].name, toks, strategy="snapfaas", force_cold=True)
-        r2 = worker.handle(specs[1].name, toks, strategy="snapfaas")
+        r1 = _invoke(worker, specs[1].name, toks, force_cold=True)
+        r2 = _invoke(worker, specs[1].name, toks)
         assert r1.cold and not r2.cold
         assert r2.boot_s == 0.0
         np.testing.assert_allclose(r1.output, r2.output, rtol=1e-6)
@@ -179,8 +189,8 @@ class TestServing:
         from repro.serving.trace import request_tokens
         spec = specs[0]  # adapter: row-granular WS
         toks = request_tokens(spec, np.random.default_rng(5), cfg.vocab_size)
-        r_ws = worker.handle(spec.name, toks, strategy="snapfaas", force_cold=True)
-        r_full = worker.handle(spec.name, toks, strategy="snapfaas-", force_cold=True)
+        r_ws = _invoke(worker, spec.name, toks, force_cold=True)
+        r_full = _invoke(worker, spec.name, toks, strategy="snapfaas-", force_cold=True)
         assert r_ws.metrics.eager_bytes <= r_full.metrics.eager_bytes
 
     def test_stray_access_is_correct(self, worker_and_specs):
@@ -189,8 +199,8 @@ class TestServing:
         (worker, specs), cfg = worker_and_specs
         spec = specs[0]
         stray = np.asarray([[cfg.vocab_size - 1, 0, 1, 2]], np.int32)
-        r_cold = worker.handle(spec.name, stray, strategy="snapfaas", force_cold=True)
-        r_reg = worker.handle(spec.name, stray, strategy="regular", force_cold=True)
+        r_cold = _invoke(worker, spec.name, stray, force_cold=True)
+        r_reg = _invoke(worker, spec.name, stray, strategy="regular", force_cold=True)
         np.testing.assert_allclose(r_cold.output, r_reg.output, rtol=1e-5, atol=1e-5)
 
     def test_pool_eviction(self):
