@@ -25,6 +25,7 @@ import numpy as np
 
 from .common import (
     STRATEGIES,
+    build_delta_suite,
     build_suite,
     cold_request,
     csv_row,
@@ -154,6 +155,156 @@ def _bench_tiers(root: str, n_functions: int, n_rounds: int):
             f"eager_speedup={eager_speedup:.2f}x;"
             f"boot_speedup={boot_speedup:.2f}x",
         ))
+    return lines, payload
+
+
+def _bench_dedup(root: str, n_functions: int, n_rounds: int):
+    """Content-addressed dedup section: N functions born from ONE shared
+    base via ``register_from_base``.
+
+    (a) **bytes stored** — the CAS store (base once + per-function deltas)
+        vs a flat baseline where each function's full snapshot is captured
+        into its own per-function store (what per-function chunk keying
+        costs).  Acceptance: CAS ≤ 0.5x flat for ≥ 4 functions.
+    (b) **capture** — shared-base registration (delta scan + synthesized
+        full manifest) vs the flat full-snapshot capture each function
+        would otherwise pay.
+    (c) **shared warm tier** — REAP cold starts where ONE sibling's
+        ``ws_full`` prefetch RAM-warms the base-content digests every
+        other sibling reads (residency is digest-keyed, not
+        function-keyed), vs per-function caching (RAM cleared between
+        functions).  Acceptance: a measured cold-e2e speedup.
+    """
+    import time as _time
+
+    from repro.core.chunkstore import ChunkStore
+    from repro.core.snapshot import take_snapshot
+
+    n = max(4, min(6, n_functions))
+    # the paper's storage-bound regime (same constrained point the tiers
+    # remote sweep uses): a shared object-store link, not local NVMe
+    remote_bw = 150e6
+    lines: List[str] = []
+    worker, specs, base_flat, reg_times = build_delta_suite(
+        os.path.join(root, "cas"), n_functions=n,
+        tiers=TierSpec(ram_bytes=1 << 30, remote_bw=remote_bw),
+    )
+    reg = worker.registry
+
+    # (a)+(b): flat per-function baseline — every function captures its own
+    # full snapshot into its own store; no cross-function index to dedup
+    # against.  (The paper's premise: time redundancy ACROSS cold function
+    # invocations exists — a per-function store can't exploit it.)
+    flat_bytes = 0
+    flat_capture_s = 0.0
+    for i, spec in enumerate(specs):
+        full_tree = dict(base_flat)
+        full_tree.update(spec.delta)
+        fstore = ChunkStore(os.path.join(root, "flat", spec.name))
+        t0 = _time.perf_counter()
+        take_snapshot(fstore, f"full-{spec.name}", full_tree,
+                      chunk_bytes=256 * 1024)
+        flat_capture_s += _time.perf_counter() - t0
+        flat_bytes += fstore.stored_bytes()
+        fstore.close()
+    cas_bytes = reg.store.stored_bytes()
+    base_bytes = reg.bases[specs[0].family].stored_bytes()
+    ratio = cas_bytes / flat_bytes if flat_bytes else 1.0
+    capture_speedup = flat_capture_s / max(sum(reg_times), 1e-9)
+    lines.append(csv_row(
+        "dedup.bytes_stored", cas_bytes / 1e6,
+        f"flat_MB={flat_bytes/1e6:.1f};ratio={ratio:.3f};"
+        f"capture_speedup={capture_speedup:.2f}x",
+    ))
+
+    # (c): shared warm tier vs per-function caching, for snapshots born on
+    # another worker (the fleet case: functions land on a shard whose packs
+    # don't hold them).  REAP reads the *full* snapshot from the store (no
+    # base pool), so it is the strategy where digest-keyed residency pays
+    # across siblings.  Every sibling's full snapshot is demoted behind the
+    # throttled remote link; per-function caching then pays the link for
+    # the WHOLE eager set on every function's cold start, while the shared
+    # warm tier pays it once (one sibling's ws_full prefetch) and serves
+    # the shared base-content digests to every other sibling from RAM —
+    # each function still fetches its own delta remotely.
+    sibs = specs[1:]
+    cold_request(worker, specs[0], "reap", drop_cache=False)  # jit warmup
+    demote_refs = {}
+    for spec in specs:
+        m = reg.functions[spec.name].full
+        for a in m.arrays.values():
+            for c in a.chunks:
+                if c is not None and not c.zero:
+                    demote_refs[c.digest] = c
+    demoted = reg.store.demote(list(demote_refs.values()))
+    per_fn_rs, shared_rs = [], []
+    for r in range(n_rounds):
+        # per-function caching baseline: RAM cleared before every cold
+        # start, promote=False pins the chunks remote — nothing a sibling
+        # fetched survives for the next function
+        for spec in sibs:
+            per_fn_rs.append(cold_request(worker, spec, "reap",
+                                          clear_ram=True, seed=600 + r,
+                                          promote=False))
+    # shared warm tier: ONE prefetch of fn0's full-snapshot working set
+    # pays the remote link off the timed path; every sibling's eager set
+    # then hits RAM/local packs for the shared digests
+    worker.registry.store.drop_page_cache(clear_ram=True)
+    prefetch_stats = worker.prefetch_function(specs[0].name,
+                                              category="ws_full")
+    # promote=False: each sibling's own delta stays remote every round —
+    # only the prefetch-warmed SHARED digests may be warm, so the speedup
+    # measures digest sharing, not per-function caching sneaking back in
+    for r in range(n_rounds):
+        for spec in sibs:
+            worker.registry.store.drop_page_cache(clear_ram=False)
+            shared_rs.append(cold_request(worker, spec, "reap",
+                                          drop_cache=False, seed=700 + r,
+                                          promote=False))
+    per_fn = _round_stats(per_fn_rs)
+    shared = _round_stats(shared_rs)
+    ram_hit_bytes = int(np.median(
+        [r.metrics.tier_bytes.get("ram", 0) for r in shared_rs]
+    ))
+    e2e_speedup = per_fn["e2e_s"] / max(shared["e2e_s"], 1e-9)
+    eager_speedup = per_fn["t_eager_s"] / max(shared["t_eager_s"], 1e-9)
+    boot_speedup = per_fn["boot_s"] / max(shared["boot_s"], 1e-9)
+    lines.append(csv_row(
+        "dedup.shared_warm", shared["t_eager_s"] * 1e6,
+        f"eager_speedup={eager_speedup:.2f}x;e2e_speedup={e2e_speedup:.2f}x;"
+        f"ram_hit_MB={ram_hit_bytes/1e6:.1f}",
+    ))
+
+    payload = {
+        "config": {"n_functions": n, "n_rounds": n_rounds,
+                   "ram_bytes": 1 << 30, "remote_bw_MBps": remote_bw / 1e6,
+                   "strategy": "reap"},
+        "bytes_stored": {
+            "cas_bytes": cas_bytes,
+            "flat_bytes": flat_bytes,
+            "base_bytes": base_bytes,
+            "ratio": ratio,
+            # acceptance: ≥4 functions sharing one base → CAS ≤ 0.5x flat
+            "cas_at_most_half": bool(ratio <= 0.5),
+        },
+        "capture": {
+            "register_from_base_s": sum(reg_times),
+            "flat_full_capture_s": flat_capture_s,
+            "speedup": capture_speedup,
+        },
+        "shared_warm": {
+            "demoted_bytes": demoted,
+            "prefetched_bytes": prefetch_stats.prefetched_bytes,
+            "prefetch_remote_fetch_s": prefetch_stats.remote_fetch_s,
+            "per_function_caching": per_fn,
+            "shared_ram": shared,
+            "ram_hit_bytes": ram_hit_bytes,
+            "e2e_speedup": e2e_speedup,
+            "eager_speedup": eager_speedup,
+            "boot_speedup": boot_speedup,
+        },
+        "registry": reg.dedup_stats(),
+    }
     return lines, payload
 
 
@@ -343,6 +494,13 @@ def run(
     )
     lines.extend(tier_lines)
 
+    # Content-addressed dedup section (always ≥4 functions from one base,
+    # whatever the main suite size — the acceptance bar needs the sharing).
+    dedup_lines, dedup_payload = _bench_dedup(
+        os.path.join(root, "dedup"), n_functions, n_rounds
+    )
+    lines.extend(dedup_lines)
+
     if json_path:
         update_bench_json(json_path, "coldstart", {
             "config": {"n_functions": n_functions, "n_rounds": n_rounds},
@@ -355,6 +513,7 @@ def run(
                 **policies,
             },
             "tiers": tiers_payload,
+            "dedup": dedup_payload,
         })
     return lines
 

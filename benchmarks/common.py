@@ -105,6 +105,46 @@ def build_suite(root: str, *, n_functions: Optional[int] = None, seed: int = 0,
     return worker, specs
 
 
+def build_delta_suite(root: str, *, n_functions: int = 4, seed: int = 0,
+                      tiers=None):
+    """Worker + N functions registered from ONE shared base via
+    ``FunctionSpec.delta`` (content-addressed shared-base registration).
+
+    Each function's delta perturbs a distinct 64-row band of the embedding
+    table (adapter-style), so the functions share every other byte of the
+    base model.  Returns ``(worker, specs, base_flat, register_times_s)``;
+    registration prefetch is off so warm-tier effects are controlled by
+    the caller."""
+    model = build_model(BENCH_CFG)
+    worker = Worker(os.path.join(root, "worker"), chunk_bytes=256 * 1024,
+                    tiers=tiers, prefetch_on_register=False)
+    base_params = model.init(seed)
+    worker.register_runtime(BENCH_CFG.name, model, base_params)
+    base_flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
+
+    rng = np.random.default_rng(seed + 1)
+    src_dir = os.path.join(root, "sources")
+    os.makedirs(src_dir, exist_ok=True)
+    specs, reg_times = [], []
+    for i in range(n_functions):
+        rows = np.arange(64 * i, 64 * (i + 1))
+        table = np.array(base_flat["embed/table"])
+        table[rows] += 0.02 * rng.standard_normal(
+            (len(rows), table.shape[1])
+        ).astype(np.float32)
+        delta = {"embed/table": table}
+        src = os.path.join(src_dir, f"dedup-fn{i}.npz")
+        np.savez(src, **delta)
+        spec = FunctionSpec(name=f"dedup-fn{i}", family=BENCH_CFG.name,
+                            delta=delta, source_path=src)
+        spec.exec_seq = 16  # type: ignore[attr-defined]
+        t0 = time.perf_counter()
+        worker.register_function(spec)
+        reg_times.append(time.perf_counter() - t0)
+        specs.append(spec)
+    return worker, specs, base_flat, reg_times
+
+
 def drop_file_cache(paths) -> None:
     for path in paths:
         if not os.path.exists(path):

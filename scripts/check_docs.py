@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Docs health check: every intra-repo markdown link must resolve.
+
+Scans the repo's markdown files (README.md, DESIGN.md, ROADMAP.md,
+docs/*.md, ...) for inline links/images ``[text](target)`` and verifies
+that every *intra-repo* target exists on disk, relative to the file the
+link appears in.  External targets (http/https/mailto) are ignored;
+in-page anchors (``#...``) are checked only for file existence when they
+carry a path; fenced code blocks are skipped.
+
+Exit code 0 = all links resolve; 1 = broken links (listed on stderr).
+Run from anywhere: ``python scripts/check_docs.py``.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) inline links and images, tolerating titles: (target "t")
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def md_files() -> list[Path]:
+    out = [p for p in REPO.glob("*.md")]
+    out += sorted((REPO / "docs").glob("*.md"))
+    out += sorted((REPO / "related").glob("*.md"))
+    return [p for p in out if p.is_file()]
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    in_code = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.strip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:          # pure in-page anchor
+                continue
+            resolved = (path.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{path.relative_to(REPO)}:{lineno}: broken link "
+                    f"-> {m.group(1)}"
+                )
+    return errors
+
+
+def main() -> int:
+    files = md_files()
+    errors = []
+    for p in files:
+        errors.extend(check_file(p))
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"\n{len(errors)} broken link(s) across {len(files)} files",
+              file=sys.stderr)
+        return 1
+    print(f"docs OK: all intra-repo links resolve across {len(files)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

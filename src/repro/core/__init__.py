@@ -16,8 +16,10 @@ Public API:
 
 from .chunkstore import (
     DEFAULT_CHUNK_BYTES,
+    INDEX_VERSION,
     ChunkRef,
     ChunkStore,
+    DigestCollisionError,
     IndexCorruptionError,
 )
 from .metrics import ColdStartMetrics
@@ -66,7 +68,9 @@ from .snapshot import (
     ArrayMeta,
     SnapshotManifest,
     flatten_pytree,
+    manifest_digests,
     resolve,
+    synthesize_full,
     take_diff_snapshot,
     take_snapshot,
     unflatten_paths,
@@ -76,8 +80,9 @@ from .workingset import AccessLog, WorkingSet, build_working_set
 __all__ = [
     "AccessLog", "ArrayMeta", "ArrayPatch", "BasePool", "ChunkRef",
     "ChunkStore", "ColdStartMetrics", "ColdStartPrediction",
-    "DEFAULT_CHUNK_BYTES", "FunctionRecord", "IndexCorruptionError",
-    "MaterializedArray",
+    "DEFAULT_CHUNK_BYTES", "DigestCollisionError", "FunctionRecord",
+    "INDEX_VERSION", "IndexCorruptionError",
+    "MaterializedArray", "manifest_digests", "synthesize_full",
     "PAPER_C220G5", "PLANNED_STRATEGIES", "PackTier", "PrefetchStats",
     "RamCacheTier", "RemoteTier", "RestoredInstance", "RestorePlan",
     "STRATEGIES",

@@ -59,6 +59,23 @@ class IndexCorruptionError(RuntimeError):
     re-capture snapshots, ...).
     """
 
+
+class DigestCollisionError(IndexCorruptionError):
+    """Two chunks with the same BLAKE2b-128 digest but different lengths.
+
+    A true 128-bit collision is astronomically unlikely; in practice this
+    means a corrupt index, a corrupt manifest, or mixed stores.  Serving
+    whichever payload was indexed first would hand a function the wrong
+    bytes, silently — so every path that could do that (index load, chunk
+    publication, scatter-read planning) raises this instead.
+    """
+
+
+#: Current on-disk ``index.json`` schema.  See ``docs/migration.md`` for
+#: the upgrade path from the legacy layouts (v1 flat digest map, v0
+#: per-function offset lists).
+INDEX_VERSION = 2
+
 _io_pool: Optional[ThreadPoolExecutor] = None
 _hash_pool: Optional[ThreadPoolExecutor] = None
 _pool_lock = threading.Lock()
@@ -220,9 +237,15 @@ class PackWriter:
     """
 
     def __init__(self, path: str, pack_id: str):
-        self._f = open(path, "wb")
+        # append, never truncate: a reopened store may hand out a pack id
+        # that already exists on disk (e.g. re-capturing `base-<family>`
+        # after a restart) while the loaded index still points into the
+        # old payloads — "wb" here would destroy them.  Appending is safe:
+        # existing offsets stay valid, and the index dedup means identical
+        # re-captures write nothing at all.
+        self._f = open(path, "ab")
         self.pack_id = pack_id
-        self.offset = 0
+        self.offset = self._f.tell()
 
     def append(self, data: bytes | memoryview) -> ChunkLoc:
         n = self._f.write(data)
@@ -290,6 +313,7 @@ class ChunkStore:
         self.root = root
         os.makedirs(os.path.join(root, "packs"), exist_ok=True)
         self._index: Dict[str, ChunkLoc] = {}
+        self._refs: Dict[str, Set[str]] = {}  # digest -> referencing owners
         self._mmaps: Dict[str, mmap.mmap] = {}
         self._files: Dict[str, object] = {}
         self._fds: Dict[str, int] = {}
@@ -301,17 +325,79 @@ class ChunkStore:
     def _index_path(self) -> str:
         return os.path.join(self.root, "index.json")
 
+    def _ingest(self, digest: str, loc: ChunkLoc) -> None:
+        """Add one index entry, rejecting same-digest/different-length
+        collisions instead of silently keeping whichever came first."""
+        prev = self._index.get(digest)
+        if prev is not None:
+            if prev.size != loc.size:
+                raise DigestCollisionError(
+                    f"digest {digest} indexed with length {prev.size} "
+                    f"(pack {prev.pack!r}) but also {loc.size} "
+                    f"(pack {loc.pack!r}); refusing to serve either"
+                )
+            return
+        self._index[digest] = loc
+
     def _load_index(self) -> None:
+        """Load ``index.json``, auto-upgrading legacy layouts in memory.
+
+        * **v2** (current): ``{"version": 2, "chunks": {digest: [pack,
+          offset, size]}, "refs": {digest: [owner, ...]}}`` — owners are
+          snapshot/function names, so reload + re-registration is
+          idempotent.
+        * **v1** (legacy): a bare ``{digest: [pack, offset, size]}`` map —
+          upgraded by wrapping; refs start empty (chunks written before
+          refcounting are treated as permanently live).
+        * **v0** (legacy): per-function offset lists, ``{"functions":
+          {fn: {array: [[pack, offset, size, digest], ...]}}}`` — flattened
+          into the digest map; the same digest appearing under several
+          functions dedups (that was the point of going content-addressed)
+          and its owner set is seeded with the functions naming it.
+
+        The upgraded form is only persisted on the next :meth:`save_index`
+        (load never writes).  Collisions on differing lengths raise
+        :class:`DigestCollisionError` whichever layout they hide in.
+        """
         p = self._index_path()
         if not os.path.exists(p):
             return
         try:
             with open(p) as f:
                 raw = json.load(f)
-            self._index = {
-                d: ChunkLoc(pack=v[0], offset=int(v[1]), size=int(v[2]))
-                for d, v in raw.items()
-            }
+            if not isinstance(raw, dict):
+                raise TypeError(f"index root is {type(raw).__name__}, not dict")
+            if "version" in raw:                      # v2
+                version = int(raw["version"])
+                if version > INDEX_VERSION:
+                    raise ValueError(f"index version {version} is newer than "
+                                     f"supported {INDEX_VERSION}")
+                for d, v in raw["chunks"].items():
+                    self._ingest(d, ChunkLoc(pack=v[0], offset=int(v[1]),
+                                             size=int(v[2])))
+                self._refs = {d: set(owners) for d, owners in
+                              raw.get("refs", {}).items() if owners}
+            elif "functions" in raw:                  # v0: per-function rows
+                for fn, arrays in raw["functions"].items():
+                    for rows in arrays.values():
+                        for row in rows:
+                            pack, offset, size, digest = (
+                                row[0], int(row[1]), int(row[2]), row[3])
+                            self._ingest(digest, ChunkLoc(
+                                pack=pack, offset=offset, size=size))
+                    # each function owns the digests it names (however
+                    # many of its arrays repeat them)
+                    named: Set[str] = {
+                        row[3] for rows in arrays.values() for row in rows
+                    }
+                    for digest in named:
+                        self._refs.setdefault(digest, set()).add(fn)
+            else:                                     # v1: flat digest map
+                for d, v in raw.items():
+                    self._ingest(d, ChunkLoc(pack=v[0], offset=int(v[1]),
+                                             size=int(v[2])))
+        except DigestCollisionError:
+            raise
         except (ValueError, TypeError, KeyError, IndexError, AttributeError) as e:
             raise IndexCorruptionError(
                 f"chunk index {p} is corrupt ({e!r}); refusing to start with "
@@ -321,9 +407,16 @@ class ChunkStore:
     def save_index(self) -> None:
         """Persist the index atomically: write a temp file, fsync, then
         ``os.replace`` — a crash mid-write leaves the previous index intact,
-        never a truncated one."""
+        never a truncated one.  Always writes the current (v2) layout;
+        loading a legacy index and saving it back is the upgrade path."""
         with self._lock:
-            raw = {d: [l.pack, l.offset, l.size] for d, l in self._index.items()}
+            raw = {
+                "version": INDEX_VERSION,
+                "chunks": {d: [l.pack, l.offset, l.size]
+                           for d, l in self._index.items()},
+                "refs": {d: sorted(owners)
+                         for d, owners in self._refs.items() if owners},
+            }
         tmp = self._index_path() + ".tmp"
         with open(tmp, "w") as f:
             json.dump(raw, f)
@@ -340,7 +433,101 @@ class ChunkStore:
         ahead of the flush would let ``preadv`` race past EOF."""
         with self._lock:
             for digest, loc in entries:
-                self._index.setdefault(digest, loc)
+                self._ingest(digest, loc)
+
+    # -------------------------------------------------------------- refcounts
+
+    def pin(self, digests: Iterable[str], owner: str) -> None:
+        """Record that snapshot ``owner`` references these digests.
+
+        References are *owner sets*, not bare counters: pinning the same
+        (owner, digest) pair twice is a no-op, so re-registering a function
+        over a reopened store (whose persisted refs already name it) cannot
+        inflate counts and wedge GC.  Zero digests are ignored; unknown
+        digests may be pinned (a manifest can reference a chunk stored in a
+        colder tier of the same hierarchy)."""
+        with self._lock:
+            for d in digests:
+                if d == _ZERO_DIGEST:
+                    continue
+                self._refs.setdefault(d, set()).add(owner)
+
+    def unpin(self, digests: Iterable[str], owner: str) -> List[str]:
+        """Drop ``owner``'s reference to each digest; returns the digests
+        left with no owners (now garbage — the caller decides whether to
+        :meth:`forget`/:meth:`compact` them).  Digests with no ref entry at
+        all (stored before refcounting — legacy v1 indexes) are treated as
+        permanently live and never returned."""
+        dead: List[str] = []
+        with self._lock:
+            for d in digests:
+                if d == _ZERO_DIGEST:
+                    continue
+                owners = self._refs.get(d)
+                if owners is None:
+                    continue
+                owners.discard(owner)
+                if not owners:
+                    del self._refs[d]
+                    dead.append(d)
+        return dead
+
+    def refcount(self, digest: str) -> int:
+        """Number of snapshots referencing ``digest`` (0 = unknown)."""
+        with self._lock:
+            return len(self._refs.get(digest, ()))
+
+    def shared_digests(self) -> Set[str]:
+        """Digests referenced by more than one snapshot (the cross-function
+        dedup working set — what the planner's shared-hit fraction prices)."""
+        with self._lock:
+            return {d for d, owners in self._refs.items() if len(owners) > 1}
+
+    def compact(self) -> int:
+        """Rewrite every *indexed* chunk into a fresh pack and delete the
+        old pack files — the physical half of garbage collection
+        (:meth:`forget` only makes bytes unreachable).  Returns bytes
+        reclaimed on disk.  Not concurrency-safe: quiesce in-flight reads
+        AND writers (a writer's pack could be deleted under it); index
+        entries published mid-compaction are preserved, but their pack
+        must not predate the compaction."""
+        pack_dir = os.path.join(self.root, "packs")
+        old_packs = set(os.listdir(pack_dir))
+        before = sum(
+            os.path.getsize(os.path.join(pack_dir, f)) for f in old_packs
+        )
+        with self._lock:
+            live = sorted(self._index.items(),
+                          key=lambda kv: (kv[1].pack, kv[1].offset))
+        # a previous compaction may have left its pack behind — pick a pack
+        # id we are not about to read from
+        seq = 1
+        while f"compact-{seq:06d}.pack" in old_packs:
+            seq += 1
+        pack_id = f"compact-{seq:06d}"
+        writer = self.open_pack(pack_id)
+        new_index: Dict[str, ChunkLoc] = {}
+        # stream chunk-by-chunk: peak memory is one chunk, not the store
+        for d, l in live:
+            new_index[d] = writer.append(
+                self.get_chunk(ChunkRef(digest=d, size=l.size))
+            )
+        writer.close()
+        with self._lock:
+            # keep entries published since `live` was snapshotted (they
+            # point into packs newer than old_packs, which survive below)
+            for d, loc in self._index.items():
+                new_index.setdefault(d, loc)
+            self._index = new_index
+        self.close()  # old mmaps/fds go away before their packs do
+        self.save_index()
+        for name in old_packs:
+            os.unlink(os.path.join(pack_dir, name))
+        after = sum(
+            os.path.getsize(os.path.join(pack_dir, f))
+            for f in os.listdir(pack_dir)
+        )
+        return before - after
 
     def forget(self, digests: Iterable[str]) -> int:
         """Drop index entries (payload bytes stay in their packs, now
@@ -405,8 +592,14 @@ class ChunkStore:
                 out.append(ref)
                 continue
             with self._lock:
-                present = ref.digest in self._index
-            if not present:
+                prev = self._index.get(ref.digest)
+                if prev is not None and prev.size != ref.size:
+                    raise DigestCollisionError(
+                        f"digest {ref.digest} already stored with length "
+                        f"{prev.size}, refusing to alias a {ref.size}-byte "
+                        f"chunk onto it"
+                    )
+            if prev is None:
                 loc = pack.append(data)
                 with self._lock:
                     # re-check under lock (another writer may have raced)
@@ -434,11 +627,22 @@ class ChunkStore:
                 self._mmaps[pack_id] = m
         return m
 
+    def _loc_for(self, ref: ChunkRef) -> ChunkLoc:
+        """Resolve a ref, rejecting length-mismatched digest collisions
+        instead of silently serving whichever chunk was indexed first."""
+        loc = self._index[ref.digest]
+        if loc.size != ref.size:
+            raise DigestCollisionError(
+                f"digest {ref.digest} requested with length {ref.size} but "
+                f"indexed with length {loc.size} (pack {loc.pack!r})"
+            )
+        return loc
+
     def get_chunk(self, ref: ChunkRef) -> bytes:
         """Single-chunk (demand-paged) read."""
         if ref.zero:
             return b"\x00" * ref.size
-        loc = self._index[ref.digest]
+        loc = self._loc_for(ref)
         m = self._pack_mmap(loc.pack, need_end=loc.offset + loc.size)
         return m[loc.offset : loc.offset + loc.size]
 
@@ -458,7 +662,7 @@ class ChunkStore:
             if ref.zero or ref.digest in seen:
                 continue
             seen.add(ref.digest)
-            loc = self._index[ref.digest]
+            loc = self._loc_for(ref)
             by_pack.setdefault(loc.pack, []).append(loc)
             wanted[(loc.pack, loc.offset)] = ref.digest
         out: Dict[str, bytes] = {}
@@ -537,7 +741,7 @@ class ChunkStore:
                 dup.append((ref.digest, view))
                 continue
             primary[ref.digest] = view
-            loc = self._index[ref.digest]
+            loc = self._loc_for(ref)
             by_pack.setdefault(loc.pack, []).append((loc.offset, loc.size, view))
 
         # plan: per pack, coalesce into runs of (file_offset, [iovec segments])

@@ -39,6 +39,11 @@ class ColdStartMetrics:
     t_eager: float = 0.0
     eager_bytes: int = 0
     eager_chunks: int = 0
+    # content-addressed dedup: bytes actually read after collapsing
+    # duplicate digests (the scatter-read engine reads each digest once,
+    # however many chunks reference it); equals eager_bytes when the eager
+    # set shares nothing with itself
+    eager_unique_bytes: int = 0
     # C: residual init
     t_init: float = 0.0
     # D: execution-time restoration overhead
@@ -94,6 +99,7 @@ class ColdStartMetrics:
         r.update({k: round(v, 3) for k, v in self.breakdown_ms().items()})
         r.update(
             eager_bytes=self.eager_bytes,
+            eager_unique_bytes=self.eager_unique_bytes,
             demand_chunks=self.demand_chunks,
             cow_faults=self.cow_faults,
             shared_bytes=self.shared_bytes_mapped,

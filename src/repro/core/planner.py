@@ -42,13 +42,25 @@ class StorageModel:
         nbytes: int,
         nchunks: int = 1,
         split: Optional[Dict[str, int]] = None,
+        shared_hit: float = 0.0,
     ) -> float:
         """One batched sequential read (readv).  ``split`` — bytes of the
         eager set per residency tier — is ignored by the flat model; the
-        tiered subclass prices each stream at its own tier's constants."""
+        tiered subclass prices each stream at its own tier's constants.
+
+        ``shared_hit`` is the content-addressed dedup discount for flat
+        models: the fraction of the (unique) eager bytes expected to be
+        served from the shared RAM chunk cache because a sibling function
+        referencing the same digests already warmed them.  Those bytes
+        stream at ``bw_mem``; only the rest pays the store."""
         if nbytes == 0:
             return 0.0
-        return self.lat_store + nbytes / self.bw_store
+        shared_hit = min(max(shared_hit, 0.0), 1.0)
+        store_bytes = nbytes * (1.0 - shared_hit)
+        t = self.lat_store + store_bytes / self.bw_store
+        if shared_hit > 0.0:
+            t += (nbytes - store_bytes) / self.bw_mem
+        return t
 
     def demand_time(self, nbytes: int, nchunks: int) -> float:
         """Synchronous per-chunk faults: latency-dominated."""
@@ -90,11 +102,17 @@ class TieredStorageModel(StorageModel):
         nbytes: int,
         nchunks: int = 1,
         split: Optional[Dict[str, int]] = None,
+        shared_hit: float = 0.0,
     ) -> float:
         if nbytes == 0:
             return 0.0
         if not split or not self.tiers:
-            return super().eager_time(nbytes, nchunks)
+            # no measured residency: fall back to the flat pricing, which
+            # still honours the expected shared-hit discount
+            return super().eager_time(nbytes, nchunks, shared_hit=shared_hit)
+        # the split is *measured* residency — shared chunks a sibling
+        # already RAM-warmed show up in the "ram" bucket, so the discount
+        # is already priced and shared_hit is deliberately ignored
         t = 0.0
         covered = 0
         for tm in self.tiers:
@@ -225,27 +243,44 @@ class SnapshotSizes:
     # {tier name: bytes}} — measured from the TieredChunkStore, consumed by
     # TieredStorageModel.eager_time (empty → flat single-tier pricing)
     tier_splits: Dict[str, Dict[str, int]] = None  # type: ignore[assignment]
+    # per-category fraction of the (unique) eager bytes that are shared
+    # (digest refcount > 1: the base or a sibling function references the
+    # same chunk) AND currently RAM-resident — the content-addressed
+    # warm-hit discount a flat StorageModel applies when it has no
+    # residency split to price from.  Byte counts above are digest-unique:
+    # the scatter-read engine reads each digest once.
+    shared_hit_fracs: Dict[str, float] = None  # type: ignore[assignment]
 
     def split(self, key: str) -> Optional[Dict[str, int]]:
         if not self.tier_splits:
             return None
         return self.tier_splits.get(key)
 
+    def shared_hit(self, key: str) -> float:
+        if not self.shared_hit_fracs:
+            return 0.0
+        return self.shared_hit_fracs.get(key, 0.0)
+
 
 def predict(strategy: str, s: SnapshotSizes, hw: StorageModel) -> ColdStartPrediction:
+    def eager(key: str, nbytes: int) -> float:
+        # unique bytes, the measured residency split (tiered models), and
+        # the expected shared-hit discount (flat models) — see SnapshotSizes
+        return hw.eager_time(nbytes, split=s.split(key),
+                             shared_hit=s.shared_hit(key))
+
     if strategy == "regular":
         return ColdStartPrediction(
             strategy, A=hw.preconfig,
-            B=hw.eager_time(s.full_bytes, split=s.split("full")),
+            B=eager("full", s.full_bytes),
             C=s.init_compute + s.residual_init, D=0.0,
         )
     if strategy == "reap":
         # full-function snapshot: WS eager, the rest demand-paged at runtime.
         return ColdStartPrediction(
             strategy, A=hw.preconfig,
-            B=(hw.eager_time(s.ws_full_bytes, split=s.split("ws_full"))
-               if s.ws_full_bytes
-               else hw.eager_time(s.full_bytes, split=s.split("full"))),
+            B=(eager("ws_full", s.ws_full_bytes) if s.ws_full_bytes
+               else eager("full", s.full_bytes)),
             C=s.residual_init,
             D=hw.demand_time(s.exec_demand_miss_bytes, s.exec_demand_miss_chunks),
         )
@@ -258,14 +293,14 @@ def predict(strategy: str, s: SnapshotSizes, hw: StorageModel) -> ColdStartPredi
     if strategy == "snapfaas-":
         return ColdStartPrediction(
             strategy, A=hw.preconfig,
-            B=hw.eager_time(s.diff_bytes, split=s.split("diff")),
+            B=eager("diff", s.diff_bytes),
             C=s.residual_init,
             D=hw.cow_time(s.cow_bytes, s.cow_faults),
         )
     if strategy == "snapfaas":
         return ColdStartPrediction(
             strategy, A=hw.preconfig,
-            B=hw.eager_time(s.ws_bytes, split=s.split("ws")),
+            B=eager("ws", s.ws_bytes),
             C=s.residual_init,
             D=hw.cow_time(s.cow_bytes, s.cow_faults)
             + hw.demand_time(s.exec_demand_miss_bytes, s.exec_demand_miss_chunks),
@@ -277,7 +312,8 @@ def lower_bound(s: SnapshotSizes, hw: StorageModel) -> float:
     """The paper's practical lower bound (§8): pre-config overlapped with the
     minimal unique-byte eager read, plus irreducible init."""
     return (
-        max(hw.preconfig, hw.eager_time(s.ws_bytes, split=s.split("ws")))
+        max(hw.preconfig, hw.eager_time(s.ws_bytes, split=s.split("ws"),
+                                        shared_hit=s.shared_hit("ws")))
         + s.residual_init
     )
 

@@ -36,7 +36,9 @@ from .restore_plan import RestorePlan, build_restore_plan, execute_restore_plan
 from .snapshot import (
     SnapshotManifest,
     flatten_pytree,
+    manifest_digests,
     resolve,
+    synthesize_full,
     take_diff_snapshot,
     take_snapshot,
 )
@@ -104,6 +106,9 @@ class ZygoteRegistry:
             device_state=device_state, chunk_bytes=self.chunk_bytes,
         )
         base.save(self.root)
+        # the runtime (zygote) itself owns the base chunks, independent of
+        # any function — deregistering every function must not collect them
+        self.store.pin(manifest_digests(base), owner=base.snapshot_id)
         self.bases[family] = base
         self.pools[family] = BasePool.load(self.store, base)
         return base
@@ -119,6 +124,17 @@ class ZygoteRegistry:
         source_path: str = "",
         device_state: Optional[Dict[str, Any]] = None,
     ) -> FunctionRecord:
+        """Register a function from its *complete* variant tree.
+
+        The diff capture dedups against the base by digest, and the full
+        capture dedups against the whole index (put_chunks), so a sibling
+        sharing the base writes only its unique chunks — but it still pays
+        the full scan-and-hash pass over every array.  Functions that are
+        *born* as a delta should use :meth:`register_from_base`, which
+        skips the full capture entirely.
+        """
+        if name in self.functions:
+            raise ValueError(f"function {name!r} already registered")
         base = self.bases[family]
         flat = flatten_pytree(variant_tree) if not _flat(variant_tree) else variant_tree
         diff = take_diff_snapshot(
@@ -131,11 +147,109 @@ class ZygoteRegistry:
             chunk_bytes=self.chunk_bytes,
         )
         full.save(self.root)
+        return self._record(name, family, diff, full, source_path)
+
+    def register_from_base(
+        self,
+        name: str,
+        family: str,
+        delta_tree: Any,
+        *,
+        source_path: str = "",
+        device_state: Optional[Dict[str, Any]] = None,
+    ) -> FunctionRecord:
+        """Shared-base registration: the content-addressed fast path.
+
+        ``delta_tree`` holds only the arrays that differ from (or don't
+        exist in) the family base; everything absent inherits the base
+        byte-for-byte.  Capture cost is proportional to the *delta*: the
+        diff snapshot chunks and hashes only the delta arrays, and the
+        full manifest is synthesized from the (base, diff) resolution
+        without reading or writing a single payload byte
+        (:func:`~repro.core.snapshot.synthesize_full`).  Ten functions
+        sharing one base store the base once plus ten deltas.
+        """
+        if name in self.functions:
+            raise ValueError(f"function {name!r} already registered")
+        base = self.bases[family]
+        flat = flatten_pytree(delta_tree) if not _flat(delta_tree) else delta_tree
+        diff = take_diff_snapshot(
+            self.store, f"diff-{name}", flat, base, device_state=device_state,
+        )
+        diff.save(self.root)
+        full = synthesize_full(base, diff, f"full-{name}")
+        full.save(self.root)
+        return self._record(name, family, diff, full, source_path)
+
+    def _record(
+        self, name: str, family: str, diff: SnapshotManifest,
+        full: SnapshotManifest, source_path: str,
+    ) -> FunctionRecord:
+        # ONE owner per function over the union of its manifests' digests:
+        # a chunk referenced by both the diff and the synthesized full is
+        # still one function-reference, so a function-private chunk never
+        # masquerades as cross-function shared
+        self.store.pin(set(manifest_digests(diff, full)), owner=name)
         rec = FunctionRecord(
             name=name, runtime=family, diff=diff, full=full, source_path=source_path,
         )
         self.functions[name] = rec
         return rec
+
+    def deregister_function(self, name: str, *, compact: bool = False) -> int:
+        """Remove a function and garbage-collect its now-unreferenced
+        chunks (refcounted: chunks shared with the base or with sibling
+        functions survive untouched).  Returns the bytes made unreachable
+        by THIS deregistration; pass ``compact=True`` to also rewrite the
+        local packs, physically reclaiming all accumulated garbage (its
+        total is not folded into the return value).
+        """
+        rec = self.functions.pop(name, None)
+        if rec is None:
+            raise KeyError(name)
+        dead = self.store.unpin(
+            set(manifest_digests(rec.diff, rec.full)), owner=name
+        )
+        freed = self.store.reclaim(dead) if hasattr(self.store, "reclaim") \
+            else self.store.forget(dead)
+        for m in (rec.diff, rec.full):
+            p = os.path.join(self.root, "manifests", f"{m.snapshot_id}.json")
+            if os.path.exists(p):
+                os.unlink(p)
+        for ws in (rec.ws, rec.ws_full):
+            if ws is not None:
+                p = os.path.join(self.root, "ws", f"{ws.snapshot_id}.json")
+                if os.path.exists(p):
+                    os.unlink(p)
+        self.store.save_index()
+        if compact:
+            self.store.compact()
+        return freed
+
+    # -- dedup accounting -----------------------------------------------------
+
+    def dedup_stats(self) -> Dict[str, object]:
+        """Cross-function dedup effectiveness of the content-addressed
+        store: ``referenced_bytes`` is what per-function (flat) stores
+        would hold — one full snapshot per function plus each runtime's
+        base — vs the ``unique_bytes`` actually stored.  Diff manifests
+        are not counted: their digests are a subset of the function's full
+        manifest, so adding them would overstate the ratio."""
+        referenced = 0
+        for fam, base in self.bases.items():
+            referenced += base.stored_bytes()
+        for rec in self.functions.values():
+            referenced += rec.full.stored_bytes()
+        unique = self.store.stored_bytes()
+        shared = self.store.shared_digests() \
+            if hasattr(self.store, "shared_digests") else set()
+        return {
+            "functions": len(self.functions),
+            "referenced_bytes": referenced,
+            "unique_bytes": unique,
+            "dedup_ratio": round(unique / referenced, 4) if referenced else 1.0,
+            "shared_digests": len(shared),
+        }
 
     def generate_working_set(self, name: str, log: AccessLog) -> None:
         """Mock invocation already happened under ``log``; cut WS files."""
@@ -191,13 +305,30 @@ class ZygoteRegistry:
         rec.category_refs = out
         return out
 
-    def prefetch_working_set(self, name: str) -> PrefetchStats:
+    def prefetch_working_set(
+        self, name: str, category: str = "ws"
+    ) -> PrefetchStats:
         """Promote ``name``'s working set into the warm tiers (RAM cache +
         local packs) — the registration/shard-assignment prefetch step.
         Remote-resident WS chunks cross the throttled link here, once, so
-        cold starts stop paying it."""
+        cold starts stop paying it.
+
+        ``category`` selects which eager set to warm: ``"ws"`` (default;
+        falls back to the whole diff when no WS was generated), ``"diff"``,
+        ``"ws_full"`` or ``"full"``.  The full-snapshot categories matter
+        for cross-function sharing: warming one function's ``ws_full``
+        RAM-caches the base-content chunks every sibling's REAP restore
+        reads, because residency is digest-keyed, not function-keyed."""
+        if category not in ("ws", "diff", "ws_full", "full"):
+            raise ValueError(
+                f"unknown prefetch category {category!r}; one of "
+                f"'ws', 'diff', 'ws_full', 'full'"
+            )
         cats = self._category_refs(name)
-        refs = cats["ws"] if cats["ws"] else cats["diff"]
+        if category == "ws":
+            refs = cats["ws"] if cats["ws"] else cats["diff"]
+        else:
+            refs = cats[category]
         return self.store.prefetch(refs)
 
     def demote_function(self, name: str) -> int:
@@ -331,34 +462,52 @@ class ZygoteRegistry:
     # -- model facts ------------------------------------------------------------
 
     def sizes(self, name: str, *, residual_init_s: float = 0.0) -> SnapshotSizes:
+        """Byte-level facts for Eq. 1.  All eager-set byte counts are
+        *unique* (digest-deduped) — the scatter-read engine reads each
+        digest once however many chunks reference it, so deduped bytes are
+        what the B term actually streams.  ``shared_hit_fracs`` carries,
+        per category, the fraction of those bytes that are multi-referenced
+        (shared with the base or a sibling function) *and* currently
+        RAM-resident — the expected cross-function warm-hit discount for
+        flat (non-tiered) storage models."""
         rec = self.functions[name]
         base = self.bases[rec.runtime]
         resolved = resolve(base, rec.diff)
-        diff_bytes = rec.diff.stored_bytes()
-        ws_bytes = rec.ws.bytes_for(resolved) if rec.ws is not None else diff_bytes
-        full_resolved = resolve(None, rec.full)
-        ws_full_bytes = 0
-        if rec.ws_full is not None:
-            for path, idx in rec.ws_full.chunks:
-                ra = full_resolved.get(path)
-                if ra is not None and idx < len(ra.sources):
-                    _, ref = ra.sources[idx]
-                    if not ref.zero:
-                        ws_full_bytes += ref.size
+        cats = self._category_refs(name)
+        shared_digests = self.store.shared_digests() \
+            if hasattr(self.store, "shared_digests") else set()
+
+        unique: Dict[str, int] = {}
+        shared_hit_fracs: Dict[str, float] = {}
+        for key, refs in cats.items():
+            seen = set()
+            total = hit = 0
+            for r in refs:
+                if r.zero or r.digest in seen:
+                    continue
+                seen.add(r.digest)
+                total += r.size
+                if r.digest in shared_digests and \
+                        self.store.tier_of(r.digest) == "ram":
+                    hit += r.size
+            unique[key] = total
+            shared_hit_fracs[key] = hit / total if total else 0.0
+
+        diff_bytes = unique["diff"]
+        ws_bytes = unique["ws"] if rec.ws is not None else diff_bytes
         shared = sum(
             ra.meta.nbytes for ra in resolved.values() if not ra.dirty_indices()
         )
         # actual residency split of each strategy's eager set, so a
         # TieredStorageModel prices B from where the bytes really live
         tier_splits = {
-            key: self.store.residency(refs)
-            for key, refs in self._category_refs(name).items()
+            key: self.store.residency(refs) for key, refs in cats.items()
         }
         return SnapshotSizes(
-            full_bytes=rec.full.stored_bytes(),
+            full_bytes=unique["full"],
             diff_bytes=diff_bytes,
             ws_bytes=ws_bytes,
-            ws_full_bytes=ws_full_bytes,
+            ws_full_bytes=unique["ws_full"],
             ws_chunks=rec.ws.size() if rec.ws else 0,
             non_ws_diff_bytes=max(0, diff_bytes - ws_bytes),
             non_ws_diff_chunks=0,
@@ -368,6 +517,7 @@ class ZygoteRegistry:
             init_compute=rec.init_compute_s,
             residual_init=residual_init_s,
             tier_splits=tier_splits,
+            shared_hit_fracs=shared_hit_fracs,
         )
 
 

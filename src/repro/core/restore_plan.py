@@ -71,6 +71,10 @@ class RestorePlan:
     device_state: Dict[str, Any]
     eager_bytes: int = 0
     eager_chunks: int = 0
+    #: eager bytes after collapsing duplicate digests — what the engine
+    #: actually streams from storage (content addressing: N chunk slots
+    #: referencing one digest are read once and replicated by memcpy)
+    unique_eager_bytes: int = 0
     shared_bytes: int = 0
     # tier placement of the eager set when built against a tiered store:
     # {tier name: bytes} plus the store's residency epoch at build time —
@@ -195,6 +199,11 @@ def build_restore_plan(
         eager_bytes=eager_bytes, eager_chunks=eager_chunks,
         shared_bytes=shared_bytes,
     )
+    uniq: Set[str] = set()
+    for r in plan.eager_refs():
+        if r.digest not in uniq:
+            uniq.add(r.digest)
+            plan.unique_eager_bytes += r.size
     # record where the eager set lives right now (tiered stores): the Eq. 1
     # input for this plan, and the staleness stamp the registry checks
     if store is not None and hasattr(store, "residency"):
@@ -274,6 +283,7 @@ def execute_restore_plan(
     m.t_eager = t.lap()
     m.eager_bytes = plan.eager_bytes
     m.eager_chunks = plan.eager_chunks
+    m.eager_unique_bytes = plan.unique_eager_bytes
 
     # C: residual, un-memoizable initialization.
     device_state = dict(plan.device_state)

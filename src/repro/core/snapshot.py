@@ -310,6 +310,61 @@ def _is_flat(tree: Any) -> bool:
     )
 
 
+def manifest_digests(*manifests: Optional[SnapshotManifest]) -> List[str]:
+    """Every non-zero chunk digest the given manifests reference, with
+    multiplicity *one per manifest* (refcounting unit: a manifest either
+    needs a digest or it doesn't — how many of its arrays repeat the chunk
+    is irrelevant to whether it may be collected)."""
+    out: List[str] = []
+    for m in manifests:
+        if m is None:
+            continue
+        seen: set = set()
+        for a in m.arrays.values():
+            for c in a.chunks:
+                if c is not None and not c.zero and c.digest not in seen:
+                    seen.add(c.digest)
+                    out.append(c.digest)
+    return out
+
+
+def synthesize_full(
+    base: SnapshotManifest,
+    diff: SnapshotManifest,
+    snapshot_id: str,
+) -> SnapshotManifest:
+    """Build a *full* manifest for the (base, diff) stack without touching
+    a single payload byte.
+
+    This is the content-addressed capture path for functions registered
+    from a shared base: the effective chunk map is resolved (diff overrides
+    base) and written down as a full manifest whose every ChunkRef points
+    at chunks the store already holds.  No re-chunking, no re-hashing, no
+    pack writes — where :func:`take_snapshot` pays a full scan of every
+    array, this pays a dictionary merge.
+    """
+    resolved = resolve(base, diff)
+    arrays: Dict[Path, ArrayMeta] = {}
+    for path, ra in resolved.items():
+        arrays[path] = ArrayMeta(
+            shape=ra.meta.shape, dtype=ra.meta.dtype,
+            chunk_bytes=ra.meta.chunk_bytes,
+            chunks=[ref for _, ref in ra.sources],
+        )
+    device_state = dict(base.device_state)
+    device_state.update(diff.device_state)
+    return SnapshotManifest(
+        snapshot_id=snapshot_id,
+        kind="full",
+        runtime=diff.runtime or base.runtime,
+        parent=None,
+        mesh_fingerprint=diff.mesh_fingerprint or base.mesh_fingerprint,
+        arrays=arrays,
+        device_state=device_state,
+        created_at=time.time(),
+    )
+
+
 # --------------------------------------------------------------------------
 # layered resolution
 # --------------------------------------------------------------------------

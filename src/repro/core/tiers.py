@@ -500,6 +500,60 @@ class TieredChunkStore:
         self.prefetch_fetch_s += stats.remote_fetch_s
         return stats
 
+    # -------------------------------------------------- refcounted GC (CAS)
+
+    def pin(self, digests, owner: str) -> None:
+        """Snapshot references live on the *local* store's owner table
+        (one table per hierarchy — a digest demoted to the remote tier is
+        still the same logical chunk)."""
+        self.local.pin(digests, owner)
+
+    def unpin(self, digests, owner: str) -> List[str]:
+        return self.local.unpin(digests, owner)
+
+    def refcount(self, digest: str) -> int:
+        return self.local.refcount(digest)
+
+    def shared_digests(self):
+        return self.local.shared_digests()
+
+    def reclaim(self, digests: Sequence[str]) -> int:
+        """Make garbage digests unreachable across the whole hierarchy:
+        RAM cache entries are discarded, and both pack tiers forget their
+        index entries.  Returns bytes made unreachable (payloads stay in
+        their packs until :meth:`compact`)."""
+        digests = list(digests)
+        if not digests:
+            return 0
+        self.ram.discard(digests)
+        remote_only = 0
+        if self._remote is not None:
+            rs = self._remote.store
+            # promoted chunks exist in BOTH pack tiers; count each logical
+            # chunk once (the local forget below already covers those)
+            remote_only = sum(
+                rs.location(d).size for d in digests
+                if d not in self.local and d in rs
+            )
+        freed = self.local.forget(digests) + remote_only
+        if self._remote is not None:
+            self._remote.store.forget(digests)
+        self._bump_epoch()
+        return freed
+
+    def compact(self) -> int:
+        """Rewrite the local pack tier down to its live (indexed) chunks.
+        In-flight promotions are drained first — their pack is folded into
+        the rewrite and a fresh one opens on the next promotion."""
+        self.join_promotions()
+        with self._lock:
+            if self._promote_pack is not None:
+                self._promote_pack.close()
+                self._promote_pack = None
+        reclaimed = self.local.compact()
+        self._bump_epoch()
+        return reclaimed
+
     # ------------------------------------------------------------ write path
 
     def open_pack(self, pack_id: str) -> PackWriter:

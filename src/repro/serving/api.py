@@ -101,6 +101,11 @@ class ColdStartOptions:
     force_cold: bool = False            # bypass the warm pool (bench/measure)
     engine: Optional[str] = None        # "planned" | "legacy" | None (env default)
     prefetch: bool = False              # promote the WS to warm tiers first
+    #: which eager set the prefetch hint warms: "ws" (default), "diff",
+    #: "ws_full" or "full".  The full-snapshot categories warm the shared
+    #: base-content digests too — residency is content-addressed, so one
+    #: prefetch serves every sibling function referencing those chunks.
+    prefetch_category: str = "ws"
     promote: Optional[bool] = None      # remote fetches promote downward
 
     def with_strategy(self, strategy: "Strategy | str") -> "ColdStartOptions":

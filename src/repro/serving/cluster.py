@@ -105,10 +105,16 @@ class Cluster:
         w.register_function(spec)
         return w
 
-    def prefetch_function(self, fn: str):
+    def prefetch_function(self, fn: str, category: str = "ws"):
         """Re-run the WS prefetch on ``fn``'s owning worker (e.g. after its
         warm tiers were dropped, or after a shard reassignment)."""
-        return self.worker_for(fn).prefetch_function(fn)
+        return self.worker_for(fn).prefetch_function(fn, category)
+
+    def deregister_function(self, fn: str) -> int:
+        """Remove ``fn`` from its home shard and garbage-collect its
+        now-unreferenced chunks (shared-base chunks survive — refcounted).
+        Returns bytes made unreachable on the owning worker."""
+        return self.worker_for(fn).deregister_function(fn)
 
     def worker_for(self, fn: str) -> Worker:
         return self.workers[_shard_of(fn, len(self.workers))]
@@ -180,6 +186,7 @@ class Cluster:
                 "functions": sorted(w.specs),
                 "pool": w.pool.stats(),
                 "tiers": w.tier_stats(),
+                "dedup": w.registry.dedup_stats(),
             })
         pools = [w.pool for w in self.workers]
         hits = sum(p.hits for p in pools)
@@ -208,6 +215,17 @@ class Cluster:
             "remote_fetched_bytes": sum(r["fetched_bytes"] for r in remote),
             "remote_fetch_s": round(sum(r["fetch_s"] for r in remote), 6),
         }
+        # fleet dedup view: what a per-function (flat) store would hold vs
+        # the unique bytes the content-addressed stores actually hold
+        dedup_rows = [pw["dedup"] for pw in per_worker]
+        referenced = sum(d["referenced_bytes"] for d in dedup_rows)
+        unique = sum(d["unique_bytes"] for d in dedup_rows)
+        dedup = {
+            "referenced_bytes": referenced,
+            "unique_bytes": unique,
+            "dedup_ratio": round(unique / referenced, 4) if referenced else 1.0,
+            "shared_digests": sum(d["shared_digests"] for d in dedup_rows),
+        }
         return {
             "n_workers": len(self.workers),
             "n_requests": n_req,
@@ -225,6 +243,7 @@ class Cluster:
                                  if hits + misses else 0.0,
             },
             "tiers": tiers,
+            "dedup": dedup,
             "per_worker": per_worker,
         }
 

@@ -49,15 +49,27 @@ PyTree = Any
 class FunctionSpec:
     """What the developer 'uploads' (paper Fig. 3): variant params + which
     leaves its requests touch (handler signature) + a declared resolver for
-    its source artifacts (``seuss``/``regular`` boot path)."""
+    its source artifacts (``seuss``/``regular`` boot path).
+
+    Two upload shapes:
+
+    * ``variant`` — the complete parameter tree (legacy path; capture
+      diffs it against the base, paying a full scan).
+    * ``delta`` — only the arrays that differ from the family base
+      (shared-base registration: capture cost and stored bytes are
+      proportional to the delta; everything else is inherited by content
+      address — ``ZygoteRegistry.register_from_base``).  When ``delta``
+      is set, ``variant`` may be left empty.
+    """
 
     name: str
     family: str
-    variant: Dict[str, np.ndarray]          # flat path → array
+    variant: Dict[str, np.ndarray] = field(default_factory=dict)
     touched: Optional[List[str]] = None     # leaves a request reads (None=all)
     touched_rows: Dict[str, List[int]] = field(default_factory=dict)
     source_path: str = ""
     resolver: Optional[SourceResolver] = None  # default: NpzSourceResolver
+    delta: Optional[Dict[str, np.ndarray]] = None  # shared-base upload
 
 
 #: deprecated alias — results are InvocationResult now (same field names
@@ -116,15 +128,34 @@ class Worker:
     # -- function registration --------------------------------------------------
 
     def register_function(self, spec: FunctionSpec) -> None:
+        if spec.delta is not None:
+            # shared-base registration: capture only the delta; the full
+            # manifest is synthesized by content address (no re-capture)
+            rec = self.registry.register_from_base(
+                spec.name, spec.family, spec.delta,
+                source_path=spec.source_path,
+            )
+        else:
+            rec = self.registry.register_function(
+                spec.name, spec.family, spec.variant,
+                source_path=spec.source_path,
+            )
+        # publish the spec only once the registry accepted the name — a
+        # duplicate-registration ValueError must leave the worker untouched
         self.specs[spec.name] = spec
-        rec = self.registry.register_function(
-            spec.name, spec.family, spec.variant, source_path=spec.source_path
-        )
         if spec.resolver is None:
             spec.resolver = self._default_resolver(spec)
-        # mock invocation under access tracking → WS files (paper Fig. 4)
+        # mock invocation under access tracking → WS files (paper Fig. 4).
+        # Delta specs default to touching the whole effective tree (base
+        # arrays + delta), matching what a full `variant` upload declares.
+        if spec.touched is not None:
+            touched = spec.touched
+        elif spec.delta is not None:
+            touched = set(self.registry.bases[spec.family].arrays) | set(spec.delta)
+        else:
+            touched = spec.variant
         log = AccessLog()
-        for path in (spec.touched if spec.touched is not None else spec.variant):
+        for path in touched:
             log.touch(path)
         for path, rows in spec.touched_rows.items():
             log.touch_rows(path, rows)
@@ -157,10 +188,23 @@ class Worker:
             self._auto.pop(spec.name, None)
         self._auto_entry(spec.name)
 
-    def prefetch_function(self, fn: str) -> PrefetchStats:
+    def prefetch_function(self, fn: str, category: str = "ws") -> PrefetchStats:
         """Promote ``fn``'s working set into the warm tiers now (used at
-        registration / shard assignment, and by the ``prefetch`` tier hint)."""
-        return self.registry.prefetch_working_set(fn)
+        registration / shard assignment, and by the ``prefetch`` tier hint).
+        ``category`` picks the eager set to warm (``ws``/``diff``/
+        ``ws_full``/``full``) — warming a full-snapshot set also warms every
+        sibling sharing those digests (residency is content-addressed)."""
+        return self.registry.prefetch_working_set(fn, category)
+
+    def deregister_function(self, fn: str) -> int:
+        """Remove ``fn`` everywhere on this worker: warm pool, spec, Eq. 1
+        cache, snapshots.  Chunk payloads shared with the base or sibling
+        functions survive (refcounted GC); returns bytes made unreachable."""
+        self.pool.drop(fn)
+        self.specs.pop(fn, None)
+        with self._lock:
+            self._auto.pop(fn, None)
+        return self.registry.deregister_function(fn)
 
     def tier_stats(self) -> Dict[str, Any]:
         """This worker's storage-hierarchy counters (fleet metrics)."""
@@ -169,11 +213,11 @@ class Worker:
     def _default_resolver(self, spec: FunctionSpec) -> NpzSourceResolver:
         pool = self.registry.pools[spec.family]
         base = self.registry.bases[spec.family]
+        own = spec.delta if spec.delta is not None else spec.variant
         return NpzSourceResolver(
             source_path=spec.source_path,
             base_path=self._base_npz.get(spec.family, ""),
-            source_fallback=lambda: {k: np.array(v)
-                                     for k, v in spec.variant.items()},
+            source_fallback=lambda: {k: np.array(v) for k, v in own.items()},
             base_fallback=lambda: {p: np.array(pool.get(p))
                                    for p in base.arrays},
         )
@@ -303,7 +347,7 @@ class Worker:
             # scheduler-style WS promotion into the warm tiers; deliberately
             # ahead of the timed window (the hint models a prefetch that
             # overlapped request arrival, e.g. on shard assignment)
-            self.prefetch_function(fn)
+            self.prefetch_function(fn, opts.prefetch_category)
         t0 = time.perf_counter()
         inst = None if opts.force_cold else self.pool.get(fn)
         cold = inst is None
@@ -321,7 +365,8 @@ class Worker:
 
         te = time.perf_counter()
         req_rows = {}
-        if "embed/table" in spec.touched_rows or "embed/table" in spec.variant:
+        if "embed/table" in spec.touched_rows or "embed/table" in spec.variant \
+                or (spec.delta is not None and "embed/table" in spec.delta):
             req_rows["embed/table"] = np.unique(np.asarray(request.tokens))
         params = self._params_for(spec, inst, req_rows)
         logits = self._fwd[spec.family](params, jnp.asarray(request.tokens))

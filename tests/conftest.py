@@ -46,6 +46,15 @@ def _install_hypothesis_fallback() -> None:
     def tuples(*elems):
         return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
 
+    def composite(fn):
+        # real hypothesis passes a `draw` callable as the first argument;
+        # here draw simply materializes a strategy from the shared rng
+        def builder(*args, **kwargs):
+            def draw_example(rng):
+                return fn(lambda s: s.example(rng), *args, **kwargs)
+            return _Strategy(draw_example)
+        return builder
+
     def given(**strategies):
         def deco(fn):
             sig = inspect.signature(fn)
@@ -76,6 +85,7 @@ def _install_hypothesis_fallback() -> None:
     st_mod.sampled_from = sampled_from
     st_mod.lists = lists
     st_mod.tuples = tuples
+    st_mod.composite = composite
 
     hyp = types.ModuleType("hypothesis")
     hyp.given = given

@@ -81,7 +81,8 @@ class TestChunkStore:
         store.save_index()
         assert not os.path.exists(os.path.join(root, "index.json.tmp"))
         with open(os.path.join(root, "index.json")) as f:
-            assert len(json.load(f)) == 2
+            data = json.load(f)
+        assert len(data["chunks"]) == 2  # v2 layout: {version, chunks, refs}
 
     def test_corrupt_index_detected(self, tmp_path):
         """A truncated/garbled index.json must raise a descriptive error,
