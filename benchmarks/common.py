@@ -58,19 +58,9 @@ SUITE = [
 STRATEGIES = ["regular", "reap", "seuss", "snapfaas-", "snapfaas"]
 
 
-def build_suite(root: str, *, n_functions: Optional[int] = None, seed: int = 0,
-                tiers=None, prefetch_on_register: bool = True):
-    """Worker + paper-style function suite over the bench family.
-
-    ``tiers`` (a :class:`repro.core.tiers.TierSpec`) configures the worker's
-    storage hierarchy — the tier benches use it to add a throttled remote."""
-    model = build_model(BENCH_CFG)
-    worker = Worker(os.path.join(root, "worker"), chunk_bytes=256 * 1024,
-                    tiers=tiers, prefetch_on_register=prefetch_on_register)
-    base_params = model.init(seed)
-    worker.register_runtime(BENCH_CFG.name, model, base_params)
-    base_flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
-
+def _suite_specs(root: str, base_flat, *, n_functions: Optional[int] = None,
+                 seed: int = 0) -> List[FunctionSpec]:
+    """Paper-style variant specs over ``base_flat`` (not yet registered)."""
     rng = np.random.default_rng(seed + 1)
     specs = []
     items = SUITE[: n_functions or len(SUITE)]
@@ -100,9 +90,50 @@ def build_suite(root: str, *, n_functions: Optional[int] = None, seed: int = 0,
                             source_path=src)
         spec.exec_seq = exec_seq  # type: ignore[attr-defined]
         spec.klass = klass        # type: ignore[attr-defined]
-        worker.register_function(spec)
         specs.append(spec)
+    return specs
+
+
+def build_suite(root: str, *, n_functions: Optional[int] = None, seed: int = 0,
+                tiers=None, prefetch_on_register: bool = True):
+    """Worker + paper-style function suite over the bench family.
+
+    ``tiers`` (a :class:`repro.core.tiers.TierSpec`) configures the worker's
+    storage hierarchy — the tier benches use it to add a throttled remote."""
+    model = build_model(BENCH_CFG)
+    worker = Worker(os.path.join(root, "worker"), chunk_bytes=256 * 1024,
+                    tiers=tiers, prefetch_on_register=prefetch_on_register)
+    base_params = model.init(seed)
+    worker.register_runtime(BENCH_CFG.name, model, base_params)
+    base_flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
+    specs = _suite_specs(root, base_flat, n_functions=n_functions, seed=seed)
+    for spec in specs:
+        worker.register_function(spec)
     return worker, specs
+
+
+def build_cluster_suite(root: str, *, n_functions: Optional[int] = None,
+                        seed: int = 0, n_workers: int = 2,
+                        policy_factory=None, tiers=None,
+                        pool_budget_bytes: int = 1 << 30,
+                        max_concurrency: Optional[int] = None):
+    """Cluster + the same paper-style suite, sharded across ``n_workers``
+    (the trace-serving bench substrate: runtime broadcast to every worker,
+    functions registered on their home shards)."""
+    from repro.serving.cluster import Cluster
+
+    model = build_model(BENCH_CFG)
+    cluster = Cluster(os.path.join(root, "cluster"), n_workers=n_workers,
+                      chunk_bytes=256 * 1024, policy_factory=policy_factory,
+                      tiers=tiers, pool_budget_bytes=pool_budget_bytes,
+                      max_concurrency=max_concurrency)
+    base_params = model.init(seed)
+    cluster.register_runtime(BENCH_CFG.name, model, base_params)
+    base_flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
+    specs = _suite_specs(root, base_flat, n_functions=n_functions, seed=seed)
+    for spec in specs:
+        cluster.register_function(spec)
+    return cluster, specs
 
 
 def build_delta_suite(root: str, *, n_functions: int = 4, seed: int = 0,

@@ -318,6 +318,7 @@ class ChunkStore:
         self._files: Dict[str, object] = {}
         self._fds: Dict[str, int] = {}
         self._lock = threading.Lock()
+        self._save_lock = threading.Lock()
         self._load_index()
 
     # ------------------------------------------------------------------ index
@@ -408,21 +409,28 @@ class ChunkStore:
         """Persist the index atomically: write a temp file, fsync, then
         ``os.replace`` — a crash mid-write leaves the previous index intact,
         never a truncated one.  Always writes the current (v2) layout;
-        loading a legacy index and saving it back is the upgrade path."""
-        with self._lock:
-            raw = {
-                "version": INDEX_VERSION,
-                "chunks": {d: [l.pack, l.offset, l.size]
-                           for d, l in self._index.items()},
-                "refs": {d: sorted(owners)
-                         for d, owners in self._refs.items() if owners},
-            }
-        tmp = self._index_path() + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(raw, f)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self._index_path())
+        loading a legacy index and saving it back is the upgrade path.
+
+        Saves serialise on their own lock: two concurrent saves sharing one
+        temp path would race the replace (the loser's ``os.replace`` finds
+        its temp file already moved — a FileNotFoundError the concurrency
+        soak flushed out).  The snapshot happens inside the save lock, so
+        a later save can never be overtaken by an earlier snapshot."""
+        with self._save_lock:
+            with self._lock:
+                raw = {
+                    "version": INDEX_VERSION,
+                    "chunks": {d: [l.pack, l.offset, l.size]
+                               for d, l in self._index.items()},
+                    "refs": {d: sorted(owners)
+                             for d, owners in self._refs.items() if owners},
+                }
+            tmp = self._index_path() + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(raw, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._index_path())
 
     def register_chunks(self, entries: Iterable[Tuple[str, ChunkLoc]]) -> None:
         """Publish already-written chunk locations into the index.

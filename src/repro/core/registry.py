@@ -15,6 +15,7 @@ This is the worker-side realization of the paper's Fig. 4 workflow:
 from __future__ import annotations
 
 import os
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -68,6 +69,12 @@ class FunctionRecord:
     # cleared with the working set) — keeps tier-movement replans to a
     # residency() dict lookup instead of two full resolve() passes
     category_refs: Optional[Dict[str, List[ChunkRef]]] = None
+    # serialises plan build + tier-split refresh: concurrent refreshes
+    # interleaving their (tier_split, residency_epoch) writes could pin a
+    # stale split under the newest epoch — permanently, until the next
+    # movement (no further bump would ever invalidate it)
+    plan_lock: threading.Lock = field(default_factory=threading.Lock,
+                                      repr=False, compare=False)
 
 
 class ZygoteRegistry:
@@ -252,17 +259,26 @@ class ZygoteRegistry:
         }
 
     def generate_working_set(self, name: str, log: AccessLog) -> None:
-        """Mock invocation already happened under ``log``; cut WS files."""
+        """Mock invocation already happened under ``log``; cut WS files.
+
+        The WS swap and plan-cache clear happen under the record's
+        ``plan_lock``: a plan build racing this method either finishes
+        first (and is cleared here) or starts after (and reads the new
+        working set) — it can never re-publish a stale-WS plan right
+        after the clear, where nothing would ever invalidate it."""
         rec = self.functions[name]
         base = self.bases[rec.runtime]
-        rec.ws = build_working_set(rec.diff.snapshot_id, resolve(base, rec.diff), log)
-        rec.ws.save(self.root)
-        rec.ws_full = build_working_set(
+        ws = build_working_set(rec.diff.snapshot_id, resolve(base, rec.diff), log)
+        ws_full = build_working_set(
             rec.full.snapshot_id, resolve(None, rec.full), log
         )
-        rec.ws_full.save(self.root)
-        rec.plans.clear()  # WS changed → cached eager placement is stale
-        rec.category_refs = None
+        with rec.plan_lock:
+            rec.ws = ws
+            rec.ws_full = ws_full
+            rec.plans.clear()  # WS changed → cached eager placement is stale
+            rec.category_refs = None
+        ws.save(self.root)
+        ws_full.save(self.root)
 
     # -- tier movement --------------------------------------------------------
 
@@ -351,6 +367,33 @@ class ZygoteRegistry:
 
     # -- cold start -----------------------------------------------------------
 
+    def _refresh_tier_split(self, plan: RestorePlan) -> None:
+        """Re-derive a plan's ``tier_split`` when residency moved — with the
+        epoch taken *atomically* with the rebuild.
+
+        The former check-then-act (read epoch, compute residency, publish
+        both) raced concurrent tier movement two ways: a demote completing
+        mid-``residency()`` could publish a half-moved split, and two
+        interleaved refreshes could leave a stale split pinned under the
+        newest epoch — which no future bump would ever invalidate.  Callers
+        hold the record's ``plan_lock`` (one refresh at a time); here the
+        epoch is re-checked after the residency pass, retrying if movement
+        landed during it."""
+        for _ in range(4):
+            epoch = self.store.residency_epoch
+            if plan.residency_epoch == epoch:
+                return
+            split = self.store.residency(plan.eager_refs())
+            if self.store.residency_epoch == epoch:
+                plan.tier_split = split
+                plan.residency_epoch = epoch
+                return
+        # movement kept landing during the rebuild: publish the last split
+        # under the epoch read *before* it was computed — conservatively
+        # stale, so the very next call re-derives it
+        plan.tier_split = split
+        plan.residency_epoch = epoch
+
     def restore_plan(self, name: str, strategy: str) -> RestorePlan:
         """The cached RestorePlan for (function, strategy); built on first
         use, with its tier placement refreshed when residency moved.
@@ -360,14 +403,21 @@ class ZygoteRegistry:
         not depend on tier residency, so promotion/demotion (which bumps
         the store's ``residency_epoch``) only re-derives the plan's
         ``tier_split`` (a dict lookup per eager digest), never the plan.
+        Build and refresh run under the record's ``plan_lock``: concurrent
+        cold starts of one function see exactly one plan, and a tier-split
+        refresh can never interleave with another and pin a stale split
+        under a fresh epoch.
         """
         rec = self.functions[name]
+        with rec.plan_lock:
+            return self._restore_plan_locked(rec, name, strategy)
+
+    def _restore_plan_locked(
+        self, rec: FunctionRecord, name: str, strategy: str
+    ) -> RestorePlan:
         plan = rec.plans.get(strategy)
         if plan is not None:
-            epoch = self.store.residency_epoch
-            if plan.residency_epoch != epoch:
-                plan.tier_split = self.store.residency(plan.eager_refs())
-                plan.residency_epoch = epoch
+            self._refresh_tier_split(plan)
             return plan
         base = self.bases[rec.runtime]
         if strategy == "snapfaas":

@@ -205,10 +205,15 @@ def build_restore_plan(
             uniq.add(r.digest)
             plan.unique_eager_bytes += r.size
     # record where the eager set lives right now (tiered stores): the Eq. 1
-    # input for this plan, and the staleness stamp the registry checks
+    # input for this plan, and the staleness stamp the registry checks.
+    # The epoch is read BEFORE the residency pass: movement landing during
+    # the pass then leaves the plan stamped with the older epoch, so the
+    # registry's next refresh re-derives the split (the reverse order could
+    # pin a pre-movement split under a post-movement epoch — permanently).
     if store is not None and hasattr(store, "residency"):
+        epoch = store.residency_epoch
         plan.tier_split = store.residency(plan.eager_refs())
-        plan.residency_epoch = store.residency_epoch
+        plan.residency_epoch = epoch
     return plan
 
 

@@ -123,19 +123,37 @@ class RamCacheTier:
 
     Thread-safe.  ``put`` refuses payloads larger than the whole capacity
     and evicts LRU entries (counted) until the new payload fits.
+
+    ``on_residency_change`` (optional) fires after mutations that *remove*
+    resident digests — LRU evictions, discards, clear — *outside* the
+    tier lock.  The composed store wires it to its ``residency_epoch``
+    bump so cached restore plans and Eq. 1 tables learn that a residency
+    snapshot naming this tier went stale; without it, LRU evictions were
+    the one tier movement nothing advertised.  Plain insertions do NOT
+    fire (a split that misses a fresh insertion is only conservatively
+    stale — the chunk reads fine from a colder tier — and per-insert
+    bumps would invalidate every cached plan on every demand fault); the
+    batch movement operations that insert (prefetch, promotion) advertise
+    themselves instead.
     """
 
     name = "ram"
 
-    def __init__(self, capacity_bytes: int):
+    def __init__(self, capacity_bytes: int,
+                 on_residency_change: Optional[callable] = None):
         self.capacity = capacity_bytes
         self._cache: "OrderedDict[str, bytes]" = OrderedDict()
         self.used = 0
         self._lock = threading.Lock()
+        self._on_change = on_residency_change
         self.hits = 0
         self.hit_bytes = 0
         self.evictions = 0
         self.insertions = 0
+
+    def _changed(self) -> None:
+        if self._on_change is not None:
+            self._on_change()
 
     def has(self, digest: str) -> bool:
         with self._lock:
@@ -155,6 +173,7 @@ class RamCacheTier:
         n = len(payload)
         if n > self.capacity:
             return False
+        evicted = 0
         with self._lock:
             if digest in self._cache:
                 self._cache.move_to_end(digest)
@@ -163,22 +182,32 @@ class RamCacheTier:
                 _, old = self._cache.popitem(last=False)
                 self.used -= len(old)
                 self.evictions += 1
+                evicted += 1
             self._cache[digest] = payload
             self.used += n
             self.insertions += 1
-            return True
+        if evicted:
+            self._changed()
+        return True
 
     def discard(self, digests: Iterable[str]) -> None:
+        removed = 0
         with self._lock:
             for d in digests:
                 old = self._cache.pop(d, None)
                 if old is not None:
                     self.used -= len(old)
+                    removed += 1
+        if removed:
+            self._changed()
 
     def clear(self) -> None:
         with self._lock:
+            had = bool(self._cache)
             self._cache.clear()
             self.used = 0
+        if had:
+            self._changed()
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
@@ -298,15 +327,20 @@ class TieredChunkStore:
     def __init__(self, root: str, *, spec: Optional[TierSpec] = None):
         self.root = root
         self.spec = spec or TierSpec()
+        self._lock = threading.Lock()   # before any tier that may call back
+        self.residency_epoch = 0
         self.local = ChunkStore(root)
         self.pack = PackTier(self.local)
-        self.ram = RamCacheTier(self.spec.ram_bytes)
+        # RAM-tier removals (LRU evictions, discards) are tier movement
+        # like any other: advertise them on the residency epoch so a
+        # plan's tier_split can never silently claim an evicted digest
+        self.ram = RamCacheTier(self.spec.ram_bytes,
+                                on_residency_change=self._bump_epoch)
         remote_root = self.spec.remote_root or os.path.join(root, "remote")
         self._remote_root = remote_root
         self._remote: Optional[RemoteTier] = None
         if os.path.isdir(os.path.join(remote_root, "packs")):
             self._remote = self._make_remote()
-        self._lock = threading.Lock()
         self._promote_pack: Optional[PackWriter] = None
         self._promote_seq = 0
         self._promote_futures: List[Future] = []
@@ -315,7 +349,6 @@ class TieredChunkStore:
         self.demoted_bytes = 0
         self.prefetched_bytes = 0
         self.prefetch_fetch_s = 0.0
-        self.residency_epoch = 0
 
     # ------------------------------------------------------------ tier admin
 
@@ -382,7 +415,11 @@ class TieredChunkStore:
             seen.add(ref.digest)
             if ref.digest not in self.local or remote.has(ref.digest):
                 continue
-            payloads.append(self.local.get_chunk(ref))
+            try:
+                payload = self.local.get_chunk(ref)
+            except KeyError:
+                continue    # a racing demote already moved it
+            payloads.append(payload)
             move.append(ref)
         if not move:
             return 0
@@ -413,8 +450,14 @@ class TieredChunkStore:
         ``preadv`` past the buffered (unflushed) tail of the pack."""
         fresh = [(r, p) for r, p in pairs if r.digest not in self.local]
         if to_ram:
+            inserted = 0
             for ref, payload in pairs:
-                self.ram.put(ref.digest, payload)
+                if self.ram.put(ref.digest, payload):
+                    inserted += 1
+            if inserted:
+                # one batch-level advertisement for the RAM lift (per-chunk
+                # insertion bumps would thrash every cached plan)
+                self._bump_epoch()
         if fresh:
             with self._lock:
                 if self._promote_pack is None:
@@ -475,7 +518,12 @@ class TieredChunkStore:
                 # them — with RAM disabled they are already as warm as the
                 # hierarchy gets, so don't pay (or count) a pointless read
                 if lift_ram:
-                    payload = self.local.get_chunk(ref)
+                    try:
+                        payload = self.local.get_chunk(ref)
+                    except KeyError:
+                        # demoted between lookup and read: fetch remotely
+                        fetch.append(ref)
+                        continue
                     if self.ram.put(ref.digest, payload):
                         stats.prefetched_bytes += ref.size
                         stats.prefetched_chunks += 1
@@ -575,8 +623,11 @@ class TieredChunkStore:
     def location(self, digest: str):
         """Physical location in whichever pack tier holds the digest
         (local wins; promoted chunks exist in both)."""
-        if digest in self.local:
-            return self.local.location(digest)
+        try:
+            if digest in self.local:
+                return self.local.location(digest)
+        except KeyError:
+            pass  # demoted between lookup and read — fall through to remote
         if self._remote is not None and self._remote.has(digest):
             return self._remote.store.location(digest)
         return self.local.location(digest)  # consistent KeyError
@@ -603,28 +654,42 @@ class TieredChunkStore:
 
     def get_chunk(self, ref: ChunkRef) -> bytes:
         """Single-chunk (demand-fault) read: warmest tier wins; remote
-        faults pay the throttle and promote downward."""
+        faults pay the throttle and promote downward.
+
+        Lookup and read are not atomic against concurrent tier movement
+        (a demote can forget a local digest between the ``in`` check and
+        the pack read), so a tier-level miss re-classifies through the
+        whole hierarchy before giving up — a chunk is only ``KeyError``
+        when *no* tier holds it (i.e. it was genuinely reclaimed)."""
         if ref.zero:
             return b"\x00" * ref.size
-        payload = self.ram.get(ref.digest)
-        if payload is not None:
-            return payload
-        if ref.digest in self.local:
-            payload = self.local.get_chunk(ref)
-            self.ram.put(ref.digest, payload)
-            return payload
-        if self._remote is not None and self._remote.has(ref.digest):
-            buf = bytearray(ref.size)
-            self._remote.read_into([(ref, memoryview(buf))])
-            payload = bytes(buf)
-            if self.spec.promote_on_fetch:
-                # off the faulting request's critical path, like the batch
-                # promotion — the D phase pays the remote link, not the
-                # pack append/flush
-                self._track_promotion(_get_fetch_pool().submit(
-                    self._promote_payloads, [(ref, payload)]
-                ))
-            return payload
+        for _attempt in range(2):
+            payload = self.ram.get(ref.digest)
+            if payload is not None:
+                return payload
+            if ref.digest in self.local:
+                try:
+                    payload = self.local.get_chunk(ref)
+                except KeyError:
+                    payload = None  # demoted between lookup and read
+                if payload is not None:
+                    self.ram.put(ref.digest, payload)
+                    return payload
+            if self._remote is not None and self._remote.has(ref.digest):
+                buf = bytearray(ref.size)
+                try:
+                    self._remote.read_into([(ref, memoryview(buf))])
+                except KeyError:
+                    continue    # moved again mid-flight: re-classify
+                payload = bytes(buf)
+                if self.spec.promote_on_fetch:
+                    # off the faulting request's critical path, like the
+                    # batch promotion — the D phase pays the remote link,
+                    # not the pack append/flush
+                    self._track_promotion(_get_fetch_pool().submit(
+                        self._promote_payloads, [(ref, payload)]
+                    ))
+                return payload
         raise KeyError(ref.digest)
 
     def read_batch(self, refs: Sequence[ChunkRef]) -> Dict[str, bytes]:
@@ -642,7 +707,14 @@ class TieredChunkStore:
             else:
                 out[ref.digest] = self.get_chunk(ref)  # remote (throttled)
         if local_refs:
-            out.update(self.local.read_batch(local_refs))
+            try:
+                out.update(self.local.read_batch(local_refs))
+            except KeyError:
+                # a concurrent demote moved chunks between classification
+                # and the read — re-fault each through the full hierarchy
+                for ref in local_refs:
+                    if ref.digest not in out:
+                        out[ref.digest] = self.get_chunk(ref)
         return out
 
     def read_batch_into(
@@ -742,10 +814,21 @@ class TieredChunkStore:
                 view[:] = payload
         total += ram_bytes
         promoting_bytes = 0
+        remote_fallback = False
         if remote_future is not None:
-            total += remote_future.result()
+            try:
+                total += remote_future.result()
+            except KeyError:
+                # the remote index changed between classification and the
+                # read (e.g. a racing movement) — re-classify and
+                # re-dispatch, like the local fallback above
+                remote_fallback = True
+                total += self.read_batch_into(
+                    remote_items, parallel=parallel,
+                    coalesce_gap=coalesce_gap, stats=stats, promote=promote,
+                )
             t_remote = time.perf_counter() - t_remote
-            if promote:
+            if promote and not remote_fallback:
                 pairs = [
                     (ref, bytes(view)) for ref, view in remote_items
                 ]
@@ -767,7 +850,7 @@ class TieredChunkStore:
             if local_items and not local_fallback:
                 stats.add("local", len(local_items),
                           sum(r.size for r, _ in local_items))
-            if remote_items:
+            if remote_items and not remote_fallback:
                 stats.add("remote", len(remote_items),
                           sum(r.size for r, _ in remote_items))
                 stats.remote_fetch_s += t_remote

@@ -15,7 +15,23 @@ from .policy import (
     TTLPolicy,
     make_policy,
 )
-from .cluster import Cluster
+from .admission import (
+    AdmissionConfig,
+    AdmissionController,
+    ShedError,
+    percentiles,
+)
+from .loadgen import (
+    InvocationTrace,
+    TRACE_PATTERNS,
+    TracedArrival,
+    azure_trace,
+    diurnal_trace,
+    make_trace,
+    mmpp_trace,
+    poisson_trace,
+)
+from .cluster import Cluster, TraceReplayReport
 from .worker import FunctionSpec, RequestResult, Worker
 from .trace import (
     build_cluster,
@@ -28,10 +44,13 @@ from .trace import (
 )
 
 __all__ = [
-    "Cluster", "ColdStartOptions", "FunctionSpec", "GDSFPolicy",
-    "InstancePool", "InvocationRequest", "InvocationResult", "LRUPolicy",
-    "NpzSourceResolver", "PoolPolicy", "RequestResult", "SourceResolver",
-    "Strategy", "TTLPolicy", "Worker", "build_cluster", "build_functions",
-    "make_policy", "make_requests", "replay_cluster_trace", "replay_trace",
-    "select_strategy", "summarize", "zipf_schedule",
+    "AdmissionConfig", "AdmissionController", "Cluster", "ColdStartOptions",
+    "FunctionSpec", "GDSFPolicy", "InstancePool", "InvocationRequest",
+    "InvocationResult", "InvocationTrace", "LRUPolicy", "NpzSourceResolver",
+    "PoolPolicy", "RequestResult", "ShedError", "SourceResolver", "Strategy",
+    "TRACE_PATTERNS", "TTLPolicy", "TraceReplayReport", "TracedArrival",
+    "Worker", "azure_trace", "build_cluster", "build_functions",
+    "diurnal_trace", "make_policy", "make_requests", "make_trace",
+    "mmpp_trace", "percentiles", "poisson_trace", "replay_cluster_trace",
+    "replay_trace", "select_strategy", "summarize", "zipf_schedule",
 ]

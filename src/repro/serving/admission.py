@@ -1,0 +1,223 @@
+"""Admission control: bounded queues and overload shedding in front of
+:class:`~repro.serving.cluster.Cluster`.
+
+Before this layer existed, callers hand-rolled submit loops against the
+cluster's unbounded executor: arrival bursts piled up invisibly, queueing
+delay was indistinguishable from cold-start time, and overload had no
+release valve.  The :class:`AdmissionController` gives the serving path the
+three production behaviours the paper's fleet framing assumes:
+
+* **bounded per-worker queues** — each worker shard has its own lane with
+  a queue-depth cap; a request that arrives to a full lane is *shed*
+  (counted, and its future fails fast with :class:`ShedError`) instead of
+  growing an unbounded backlog;
+* **concurrency caps** — each lane executes at most
+  ``worker_concurrency`` requests at a time, modelling per-machine CPU
+  slots; everything else waits *in the queue*, where the wait is measured;
+* **timing split** — every admitted request's end-to-end latency is
+  decomposed into queueing delay (arrival → execution start, including
+  single-flight waits behind a leader's cold boot), cold-start boot and
+  execution, so fleet percentiles (p50/p95/p99) can separate "the queue
+  was long" from "the restore was slow".
+
+The controller is deliberately a thin, inspectable object — the cluster
+stays usable without it (direct ``submit`` bypasses admission), and the
+replay driver (:meth:`Cluster.replay_trace`) builds one per run.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
+
+import numpy as np
+
+from repro.serving.api import InvocationRequest, InvocationResult
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.serving.cluster import Cluster
+
+
+class ShedError(RuntimeError):
+    """Request refused at admission: the target worker's queue was full."""
+
+    def __init__(self, function: str, worker_id: int, queue_depth: int):
+        super().__init__(
+            f"request for {function!r} shed: worker {worker_id} queue "
+            f"full ({queue_depth} waiting)"
+        )
+        self.function = function
+        self.worker_id = worker_id
+        self.queue_depth = queue_depth
+
+
+@dataclass(frozen=True)
+class AdmissionConfig:
+    """Per-worker admission limits.
+
+    ``worker_concurrency`` bounds how many requests execute concurrently
+    per worker; ``queue_depth`` bounds how many *more* may wait behind
+    them.  A request is admitted while the lane holds fewer than
+    ``queue_depth + worker_concurrency`` requests in total, so a free
+    execution slot is never wasted by a shed.  ``queue_depth=0`` means no
+    waiting room: anything beyond the executing requests is shed.
+    """
+
+    queue_depth: int = 64
+    worker_concurrency: int = 4
+
+    def __post_init__(self) -> None:
+        if self.queue_depth < 0:
+            raise ValueError("queue_depth must be >= 0")
+        if self.worker_concurrency < 1:
+            raise ValueError("worker_concurrency must be >= 1")
+
+
+def percentiles(
+    values: Sequence[float], points: Sequence[float] = (50, 95, 99)
+) -> Dict[str, float]:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` in milliseconds, rounded.
+    Empty input yields an empty dict (JSON-friendly: no NaNs)."""
+    if not len(values):
+        return {}
+    arr = np.asarray(values, dtype=np.float64)
+    return {
+        f"p{g:g}": round(float(np.percentile(arr, g)) * 1e3, 3)
+        for g in points
+    }
+
+
+class _Lane:
+    """One worker shard's admission lane: a bounded waiting room in front
+    of a fixed-width executor."""
+
+    def __init__(self, worker_id: int, cfg: AdmissionConfig):
+        self.worker_id = worker_id
+        self.cfg = cfg
+        self.executor = ThreadPoolExecutor(
+            max_workers=cfg.worker_concurrency,
+            thread_name_prefix=f"admit-w{worker_id}",
+        )
+        self.lock = threading.Lock()
+        self.waiting = 0          # admitted, not yet executing
+        self.running = 0
+        self.submitted = 0
+        self.completed = 0
+        self.shed = 0
+        self.max_waiting = 0
+        self.max_running = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self.lock:
+            return {
+                "worker_id": self.worker_id,
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "shed": self.shed,
+                "waiting": self.waiting,
+                "running": self.running,
+                "max_queue_depth": self.max_waiting,
+                "max_running": self.max_running,
+            }
+
+
+class AdmissionController:
+    """Bounded-queue admission in front of a cluster's worker shards.
+
+    ``submit`` returns a ``Future[InvocationResult]`` that either resolves
+    with the invocation's result (``queue_s`` carrying the measured
+    admission-queue + single-flight wait) or fails fast with
+    :class:`ShedError` when the target lane is full.  Counting is
+    conservation-checked: ``submitted == completed + shed + failed`` once
+    all futures resolve (the soak and hypothesis tests assert this).
+    """
+
+    def __init__(self, cluster: "Cluster", config: Optional[AdmissionConfig] = None):
+        self.cluster = cluster
+        self.config = config or AdmissionConfig()
+        self._lanes = [
+            _Lane(w.worker_id, self.config) for w in cluster.workers
+        ]
+        self._clock = cluster._clock
+        # the cluster's fleet metrics surface this controller's stats
+        cluster._admission = self
+
+    # -- submission -----------------------------------------------------------
+
+    def lane_for(self, function: str) -> _Lane:
+        # worker_id doubles as the lane index (Cluster numbers its workers
+        # 0..n-1 in construction order)
+        return self._lanes[self.cluster.worker_for(function).worker_id]
+
+    def submit(self, request: InvocationRequest) -> "Future[InvocationResult]":
+        """Admit (or shed) one request; the returned future resolves to the
+        typed result or raises :class:`ShedError`.
+
+        The admission bound counts the lane's total occupancy (executing +
+        waiting) against ``worker_concurrency + queue_depth``: a request
+        dispatched to the executor but not yet picked up by a thread still
+        counts as *waiting*, so the bound cannot over-shed during the
+        thread wakeup window, and an idle lane always admits."""
+        lane = self.lane_for(request.function)
+        cfg = self.config
+        submitted_t = self._clock()
+        with lane.lock:
+            lane.submitted += 1
+            occupancy = lane.waiting + lane.running
+            if occupancy >= cfg.queue_depth + cfg.worker_concurrency:
+                lane.shed += 1
+                fut: "Future[InvocationResult]" = Future()
+                fut.set_exception(ShedError(
+                    request.function, lane.worker_id, lane.waiting
+                ))
+                self.cluster._note_shed()
+                return fut
+            lane.waiting += 1
+            # queue depth = backlog beyond the execution slots (requests a
+            # free thread could not immediately absorb)
+            lane.max_waiting = max(
+                lane.max_waiting,
+                max(0, lane.waiting + lane.running - cfg.worker_concurrency),
+            )
+        return lane.executor.submit(self._execute, lane, request, submitted_t)
+
+    def _execute(
+        self, lane: _Lane, request: InvocationRequest, submitted_t: float
+    ) -> InvocationResult:
+        with lane.lock:
+            lane.waiting -= 1
+            lane.running += 1
+            lane.max_running = max(lane.max_running, lane.running)
+        try:
+            return self.cluster._run(request, submitted_t)
+        finally:
+            with lane.lock:
+                lane.running -= 1
+                lane.completed += 1
+
+    # -- metrics / lifecycle --------------------------------------------------
+
+    def metrics(self) -> Dict[str, object]:
+        lanes = [lane.stats() for lane in self._lanes]
+        return {
+            "queue_depth_limit": self.config.queue_depth,
+            "worker_concurrency": self.config.worker_concurrency,
+            "submitted": sum(l["submitted"] for l in lanes),
+            "completed": sum(l["completed"] for l in lanes),
+            "shed": sum(l["shed"] for l in lanes),
+            "max_queue_depth": max((l["max_queue_depth"] for l in lanes),
+                                   default=0),
+            "per_lane": lanes,
+        }
+
+    def shutdown(self, wait: bool = True) -> None:
+        for lane in self._lanes:
+            lane.executor.shutdown(wait=wait)
+
+    def __enter__(self) -> "AdmissionController":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -6,11 +6,18 @@ live on exactly one worker), runs invocations concurrently on an executor,
 and serialises concurrent cold starts of the *same* function behind a
 per-function single-flight lock (the second request rides the first boot's
 warm instance instead of duplicating the restore I/O).
+``deregister_function`` takes the same lock, so garbage collection can
+never reclaim chunks out from under an in-flight cold start of the same
+function.
 
 ``submit`` returns a ``Future[InvocationResult]``; ``replay`` drives a
-whole request trace through the executor and ``metrics`` aggregates the
-fleet view (per-worker pool stats, cold/warm counts, queue delay) that the
-Fig. 7 memory/throughput analysis needs.
+request list through the executor as fast as it can, and ``replay_trace``
+replays a timed :class:`~repro.serving.loadgen.InvocationTrace` through an
+:class:`~repro.serving.admission.AdmissionController` (bounded per-worker
+queues, concurrency caps, overload shedding).  ``metrics`` aggregates the
+fleet view — per-worker pool stats, cold/warm counts, and a ``serving``
+section with the p50/p95/p99 end-to-end latency and its queueing-delay /
+boot / execution split.
 """
 
 from __future__ import annotations
@@ -20,17 +27,29 @@ import hashlib
 import os
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, Dict, Iterable, List, Optional, Sequence
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.planner import PAPER_C220G5, StorageModel
 from repro.core.tiers import TierSpec
 from repro.models import Model
-from repro.serving.api import InvocationRequest, InvocationResult
+from repro.serving.admission import (
+    AdmissionConfig,
+    AdmissionController,
+    ShedError,
+    percentiles,
+)
+from repro.serving.api import ColdStartOptions, InvocationRequest, InvocationResult
+from repro.serving.loadgen import InvocationTrace
 from repro.serving.policy import PoolPolicy
 from repro.serving.worker import FunctionSpec, Worker
+
+#: serving-stat samples kept for percentile reporting (newest win; a soak
+#: run does not grow memory without bound)
+_SERVING_SAMPLE_CAP = 65536
 
 
 def _shard_of(name: str, n: int) -> int:
@@ -82,9 +101,16 @@ class Cluster:
         self._flight: Dict[str, threading.Lock] = {}
         self._flight_guard = threading.Lock()
         self._results_lock = threading.Lock()
+        self._clock = time.perf_counter
         self.n_requests = 0
         self.n_cold = 0
+        self.n_shed = 0
         self.queue_s_total = 0.0
+        # (queue_s, boot_s, exec_s, e2e_s, cold) per completed request —
+        # the serving-percentile sample window
+        self._samples: "deque[Tuple[float, float, float, float, bool]]" = \
+            deque(maxlen=_SERVING_SAMPLE_CAP)
+        self._admission: Optional[AdmissionController] = None
 
     # -- registration (broadcast runtimes, shard functions) -------------------
 
@@ -100,10 +126,19 @@ class Cluster:
         Registration on the owning worker also promotes the function's
         working set into that worker's warm tiers (RAM chunk cache + local
         packs) — the shard-assignment prefetch, so even a first request
-        against a remote-born snapshot restores from warm storage."""
-        w = self.worker_for(spec.name)
-        w.register_function(spec)
-        return w
+        against a remote-born snapshot restores from warm storage.
+
+        Serialises behind the function's single-flight lock (like
+        ``deregister_function``): a request racing a re-registration waits
+        until the record, working set and Eq. 1 table are complete instead
+        of observing a half-registered function."""
+        lock = self._acquire_flight(spec.name)
+        try:
+            w = self.worker_for(spec.name)
+            w.register_function(spec)
+            return w
+        finally:
+            lock.release()
 
     def prefetch_function(self, fn: str, category: str = "ws"):
         """Re-run the WS prefetch on ``fn``'s owning worker (e.g. after its
@@ -113,8 +148,25 @@ class Cluster:
     def deregister_function(self, fn: str) -> int:
         """Remove ``fn`` from its home shard and garbage-collect its
         now-unreferenced chunks (shared-base chunks survive — refcounted).
-        Returns bytes made unreachable on the owning worker."""
-        return self.worker_for(fn).deregister_function(fn)
+        Returns bytes made unreachable on the owning worker.
+
+        Serialises behind ``fn``'s single-flight lock: an in-flight cold
+        start of the same function finishes (and its bytes stay readable)
+        before GC reclaims anything; requests queued behind the removal
+        fail with a clear "not registered" error instead of reading
+        reclaimed chunks."""
+        lock = self._acquire_flight(fn)
+        try:
+            freed = self.worker_for(fn).deregister_function(fn)
+        finally:
+            # retire the lock object while still holding it, so any waiter
+            # that acquires it next fails the _acquire_flight re-check and
+            # retries on the next lifetime's lock
+            with self._flight_guard:
+                if self._flight.get(fn) is lock:
+                    del self._flight[fn]
+            lock.release()
+        return freed
 
     def worker_for(self, fn: str) -> Worker:
         return self.workers[_shard_of(fn, len(self.workers))]
@@ -128,23 +180,53 @@ class Cluster:
                 lock = self._flight[fn] = threading.Lock()
             return lock
 
+    def _acquire_flight(self, fn: str) -> threading.Lock:
+        """Acquire ``fn``'s *current* single-flight lock.
+
+        A deregistration retires the lock object it held (and a
+        re-registration mints a fresh one), so a waiter that looked the
+        lock up before the retirement could acquire an orphaned object and
+        run unserialised against holders of the fresh lock.  Re-checking
+        the mapping after the acquire closes that window: an acquired lock
+        is only honoured while it is still the published one."""
+        while True:
+            lock = self._flight_lock(fn)
+            lock.acquire()
+            with self._flight_guard:
+                if self._flight.get(fn) is lock:
+                    return lock
+            lock.release()
+
     def _run(self, request: InvocationRequest, submitted: float) -> InvocationResult:
         worker = self.worker_for(request.function)
         # single-flight: concurrent requests to one function serialise, so
         # at most one cold start per function is in flight; followers hit
         # the warm instance the leader just pooled.
-        with self._flight_lock(request.function):
+        lock = self._acquire_flight(request.function)
+        try:
             # queue_s = executor wait + single-flight wait: a follower
             # blocked behind a leader's cold boot reports that time here,
             # not as a suspiciously instant warm latency_s
             queue_s = time.perf_counter() - submitted
             result = worker.invoke(request)
+        finally:
+            lock.release()
         result = dataclasses.replace(result, queue_s=queue_s)
         with self._results_lock:
             self.n_requests += 1
             self.n_cold += int(result.cold)
             self.queue_s_total += queue_s
+            self._samples.append((
+                queue_s, result.boot_s, result.exec_s,
+                queue_s + result.latency_s, result.cold,
+            ))
         return result
+
+    def _note_shed(self) -> None:
+        """Admission-layer callback: one request was shed before reaching
+        any worker (it never appears in ``n_requests``)."""
+        with self._results_lock:
+            self.n_shed += 1
 
     def submit(self, request: InvocationRequest) -> "Future[InvocationResult]":
         """Schedule one invocation; returns a Future of the typed result."""
@@ -176,7 +258,82 @@ class Cluster:
             results[j] = fut.result()
         return results  # type: ignore[return-value]
 
+    def replay_trace(
+        self,
+        trace: InvocationTrace,
+        specs: Sequence[FunctionSpec],
+        *,
+        strategy: "object | str" = "snapfaas",
+        options: Optional[ColdStartOptions] = None,
+        admission: Optional[AdmissionConfig] = None,
+        time_scale: float = 1.0,
+        seq: int = 32,
+    ) -> "TraceReplayReport":
+        """Replay a timed :class:`InvocationTrace` through the admission
+        layer — the fleet-under-load driver.
+
+        Requests are submitted at their trace arrival times (scaled by
+        ``time_scale``; ``0`` submits as fast as possible — a pure stress
+        replay) to a fresh :class:`AdmissionController` with bounded
+        per-worker queues.  Each request either completes (its result's
+        ``queue_s`` carries the measured admission + single-flight wait),
+        is shed at a full queue, or fails; the report conserves
+        ``submitted == completed + shed + failed`` and summarises the
+        p50/p95/p99 end-to-end latency with its queueing split.  The same
+        trace replayed under different ``policy_factory`` clusters is the
+        keep-alive policy comparison (Fig. 7 under real arrivals).
+        """
+        vocab = self.workers[0].models[specs[0].family].cfg.vocab_size
+        timed = trace.requests(specs, vocab, strategy=strategy,
+                               options=options, seq=seq)
+        ctrl = AdmissionController(self, admission)
+        futures: List["Future[InvocationResult]"] = []
+        t_start = self._clock()
+        for t_arrival, req in timed:
+            if time_scale > 0:
+                delay = t_arrival * time_scale - (self._clock() - t_start)
+                if delay > 0:
+                    time.sleep(delay)
+            futures.append(ctrl.submit(req))
+        results: List[Optional[InvocationResult]] = [None] * len(futures)
+        shed = [False] * len(futures)
+        errors: List[Tuple[int, BaseException]] = []
+        for i, fut in enumerate(futures):
+            try:
+                results[i] = fut.result()
+            except ShedError:
+                shed[i] = True
+            except Exception as e:  # noqa: BLE001 - reported, not swallowed
+                errors.append((i, e))
+        wall_s = self._clock() - t_start
+        ctrl.shutdown()
+        return TraceReplayReport(
+            trace=trace, results=results, shed=shed, errors=errors,
+            wall_s=wall_s, admission=ctrl.metrics(),
+        )
+
     # -- fleet metrics ---------------------------------------------------------
+
+    def serving_stats(self) -> Dict:
+        """Percentile view of the request path: end-to-end latency and its
+        queueing-delay / boot / execution split, over the most recent
+        sample window (completed requests; sheds are counted separately)."""
+        with self._results_lock:
+            samples = list(self._samples)
+            n_shed = self.n_shed
+        cold = [s for s in samples if s[4]]
+        out = {
+            "n_samples": len(samples),
+            "n_shed": n_shed,
+            "e2e_ms": percentiles([s[3] for s in samples]),
+            "queue_ms": percentiles([s[0] for s in samples]),
+            "exec_ms": percentiles([s[2] for s in samples]),
+            "cold_boot_ms": percentiles([s[1] for s in cold]),
+            "n_cold_samples": len(cold),
+        }
+        if self._admission is not None:
+            out["admission"] = self._admission.metrics()
+        return out
 
     def metrics(self) -> Dict:
         per_worker = []
@@ -230,6 +387,7 @@ class Cluster:
             "n_workers": len(self.workers),
             "n_requests": n_req,
             "n_cold": n_cold,
+            "serving": self.serving_stats(),
             "cold_fraction": round(n_cold / n_req, 4) if n_req else 0.0,
             "mean_queue_ms": round(queue_total / n_req * 1e3, 3) if n_req else 0.0,
             "pool": {
@@ -255,3 +413,62 @@ class Cluster:
 
     def __exit__(self, *exc) -> None:
         self.shutdown()
+
+
+@dataclasses.dataclass
+class TraceReplayReport:
+    """Outcome of one :meth:`Cluster.replay_trace` run.
+
+    ``results[i]`` is the i-th arrival's :class:`InvocationResult` (or
+    ``None`` if it was shed/failed); ``shed[i]`` marks admission sheds;
+    ``errors`` carries (index, exception) for hard failures.  The
+    conservation invariant ``submitted == completed + shed + failed``
+    holds by construction.
+    """
+
+    trace: InvocationTrace
+    results: List[Optional[InvocationResult]]
+    shed: List[bool]
+    errors: List[Tuple[int, BaseException]]
+    wall_s: float
+    admission: Dict
+
+    @property
+    def n_submitted(self) -> int:
+        return len(self.results)
+
+    @property
+    def n_completed(self) -> int:
+        return sum(1 for r in self.results if r is not None)
+
+    @property
+    def n_shed(self) -> int:
+        return sum(self.shed)
+
+    @property
+    def n_failed(self) -> int:
+        return len(self.errors)
+
+    def completed(self) -> List[InvocationResult]:
+        return [r for r in self.results if r is not None]
+
+    def summary(self) -> Dict:
+        """JSON-ready percentile summary (the bench ``trace_serving`` row)."""
+        done = self.completed()
+        cold = [r for r in done if r.cold]
+        return {
+            "pattern": self.trace.pattern,
+            "seed": self.trace.seed,
+            "n_submitted": self.n_submitted,
+            "n_completed": self.n_completed,
+            "n_shed": self.n_shed,
+            "n_failed": self.n_failed,
+            "n_cold": len(cold),
+            "wall_s": round(self.wall_s, 4),
+            "offered_rps": round(self.trace.mean_rps, 3),
+            "e2e_ms": percentiles([r.queue_s + r.latency_s for r in done]),
+            "queue_ms": percentiles([r.queue_s for r in done]),
+            "exec_ms": percentiles([r.exec_s for r in done]),
+            "cold_boot_ms": percentiles([r.boot_s for r in cold]),
+            "max_queue_depth": self.admission.get("max_queue_depth", 0),
+        }

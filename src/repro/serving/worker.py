@@ -341,7 +341,14 @@ class Worker:
         resolved through the planner), execution, pool re-admission."""
         fn = request.function
         opts = request.options
-        spec = self.specs[fn]
+        spec = self.specs.get(fn)
+        if spec is None:
+            # requests queued behind a deregistration land here — a clear
+            # error, never a read of reclaimed chunks
+            raise KeyError(
+                f"function {fn!r} is not registered on worker "
+                f"{self.worker_id} (never registered, or deregistered)"
+            )
         strategy = self.resolve_strategy(fn, opts.strategy)
         if opts.prefetch:
             # scheduler-style WS promotion into the warm tiers; deliberately

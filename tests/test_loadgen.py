@@ -1,0 +1,145 @@
+"""Load-engine tests: trace generators are deterministic, well-formed,
+statistically sane, and materialize byte-identical request streams."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.loadgen import (
+    TRACE_PATTERNS,
+    InvocationTrace,
+    azure_trace,
+    diurnal_trace,
+    make_trace,
+    mmpp_trace,
+    poisson_trace,
+    zipf_weights,
+)
+
+
+class TestWellFormed:
+    @settings(max_examples=24, deadline=None)
+    @given(
+        pattern=st.sampled_from(sorted(TRACE_PATTERNS)),
+        seed=st.integers(0, 2**16),
+        rps=st.sampled_from([5.0, 40.0, 150.0]),
+        n_functions=st.integers(1, 9),
+    )
+    def test_invariants(self, pattern, seed, rps, n_functions):
+        """Any seeded trace: sorted in-window arrivals, valid function
+        indices, non-negative times, stable provenance fields."""
+        tr = make_trace(pattern, rps=rps, duration_s=3.0,
+                        n_functions=n_functions, seed=seed)
+        ts = [a.t for a in tr.arrivals]
+        assert ts == sorted(ts)
+        assert all(0.0 <= t < 3.0 for t in ts)
+        assert all(0 <= a.function_idx < n_functions for a in tr.arrivals)
+        assert all(a.seed >= 0 for a in tr.arrivals)
+        assert tr.pattern == pattern and tr.seed == seed
+        assert tr.n_functions == n_functions
+
+    def test_unknown_pattern_rejected(self):
+        with pytest.raises(ValueError, match="unknown trace pattern"):
+            make_trace("lunar", rps=10, duration_s=1, n_functions=2)
+
+    def test_param_validation(self):
+        with pytest.raises(ValueError):
+            mmpp_trace(rps=10, duration_s=1, n_functions=2, burst_fraction=0.0)
+        with pytest.raises(ValueError):
+            diurnal_trace(rps=10, duration_s=1, n_functions=2, depth=1.5)
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("pattern", sorted(TRACE_PATTERNS))
+    def test_same_seed_same_trace(self, pattern):
+        a = make_trace(pattern, rps=80, duration_s=2.0, n_functions=5, seed=11)
+        b = make_trace(pattern, rps=80, duration_s=2.0, n_functions=5, seed=11)
+        assert a.arrivals == b.arrivals
+
+    @pytest.mark.parametrize("pattern", sorted(TRACE_PATTERNS))
+    def test_different_seed_different_trace(self, pattern):
+        a = make_trace(pattern, rps=80, duration_s=2.0, n_functions=5, seed=1)
+        b = make_trace(pattern, rps=80, duration_s=2.0, n_functions=5, seed=2)
+        assert a.arrivals != b.arrivals
+
+
+class TestStatistics:
+    def test_mean_rate_approximates_target(self):
+        """Long-window mean rate lands near the requested RPS for every
+        pattern (MMPP/diurnal modulate the rate but conserve its mean)."""
+        for pattern in sorted(TRACE_PATTERNS):
+            rates = [
+                make_trace(pattern, rps=50, duration_s=120.0,
+                           n_functions=6, seed=s).mean_rps
+                for s in range(4)
+            ]
+            mean = float(np.mean(rates))
+            assert 0.8 * 50 <= mean <= 1.2 * 50, (pattern, mean)
+
+    def test_zipf_popularity_skew(self):
+        """Rank 0 dominates; empirical shares track the Zipf weights."""
+        tr = poisson_trace(rps=300, duration_s=20.0, n_functions=6,
+                           zipf_alpha=1.1, seed=0)
+        counts = np.bincount(
+            [a.function_idx for a in tr.arrivals], minlength=6
+        ).astype(float)
+        shares = counts / counts.sum()
+        w = zipf_weights(6, 1.1)
+        assert shares[0] == shares.max()
+        assert np.all(np.abs(shares - w) < 0.08)
+
+    def test_azure_per_function_rates_follow_zipf(self):
+        """The azure pattern gives each function its own Poisson process at
+        its Zipf share of the aggregate rate."""
+        tr = azure_trace(rps=200, duration_s=30.0, n_functions=5,
+                         zipf_alpha=1.2, seed=3)
+        counts = np.bincount(
+            [a.function_idx for a in tr.arrivals], minlength=5
+        ).astype(float)
+        w = zipf_weights(5, 1.2)
+        expected = w * len(tr)
+        # each per-function Poisson count within 5 sigma of its mean
+        assert np.all(np.abs(counts - expected) <= 5 * np.sqrt(expected) + 5)
+
+    def test_mmpp_is_burstier_than_poisson(self):
+        """Index of dispersion (var/mean of per-100ms bin counts) ≫ 1 for
+        the MMPP trace, ≈ 1 for Poisson — the point of the pattern."""
+        def dispersion(tr):
+            bins = np.bincount(
+                [int(a.t / 0.1) for a in tr.arrivals],
+                minlength=int(tr.duration_s / 0.1),
+            ).astype(float)
+            return bins.var() / max(bins.mean(), 1e-9)
+
+        pois = poisson_trace(rps=100, duration_s=60.0, n_functions=4, seed=5)
+        mmpp = mmpp_trace(rps=100, duration_s=60.0, n_functions=4, seed=5,
+                          burst_factor=10.0, burst_fraction=0.1)
+        assert dispersion(mmpp) > 2.0 * dispersion(pois)
+
+    def test_diurnal_rate_follows_the_curve(self):
+        """First half of a one-period sine (peak) carries more arrivals
+        than the second half (trough)."""
+        tr = diurnal_trace(rps=100, duration_s=40.0, n_functions=4,
+                           depth=0.9, seed=2)
+        first = sum(1 for a in tr.arrivals if a.t < 20.0)
+        second = len(tr) - first
+        assert first > 1.5 * second
+
+
+class TestRequestMaterialization:
+    def test_requests_are_byte_identical_across_materializations(self):
+        """The satellite invariant's first half: the same trace always
+        materializes the same function order and identical token bytes."""
+        class _Spec:
+            def __init__(self, name):
+                self.name = name
+                self.touched_rows = {}
+
+        specs = [_Spec(f"fn{i}") for i in range(3)]
+        tr = make_trace("mmpp", rps=60, duration_s=1.0, n_functions=3, seed=9)
+        a = tr.requests(specs, vocab=512)
+        b = tr.requests(specs, vocab=512)
+        assert len(a) == len(b) == len(tr)
+        for (ta, ra), (tb, rb) in zip(a, b):
+            assert ta == tb and ra.function == rb.function
+            np.testing.assert_array_equal(ra.tokens, rb.tokens)

@@ -1,0 +1,172 @@
+"""Bounded concurrency soak (``-m soak``): N threads hammer register /
+invoke / prefetch / demote / deregister against one cluster, with
+byte-equivalence asserts on every invocation output.
+
+This is the instrument that shook out the ISSUE 5 race fixes (plan-epoch
+check-then-act, tier lookup-then-read vs demotion, deregister vs in-flight
+cold start).  Fixed seed, bounded wall time (``REPRO_SOAK_SECONDS``,
+default ~25 s of op time); acceptance is zero byte-equivalence violations
+and zero lost invocations — every submitted op resolves to a correct
+result or a *clean*, expected error (a request racing a deregistration
+sees "not registered", never wrong bytes or a stuck future).
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import TierSpec
+from repro.serving import ColdStartOptions, InvocationRequest, Strategy
+
+SOAK_SECONDS = float(os.environ.get("REPRO_SOAK_SECONDS", "25"))
+N_THREADS = 6
+SEED = 0xF1EE7
+
+# fast remote throttle: movement semantics, not timing
+FAST_REMOTE = dict(remote_bw=10e9, remote_lat=0.0)
+
+
+@pytest.mark.soak
+def test_concurrency_soak_byte_equivalence_and_conservation(tmp_path):
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.serving.trace import build_cluster, request_tokens
+
+    cfg = reduced(get_config("gemma-2b"))
+    model = build_model(cfg)
+    cluster, specs = build_cluster(
+        str(tmp_path), cfg, model, n_workers=2, n_functions=4,
+        tiers=TierSpec(ram_bytes=32 << 20, **FAST_REMOTE),
+    )
+    token_seeds = (11, 23, 47)
+
+    with cluster:
+        # ground truth: serial cold invocations, one per (function, seed)
+        expected = {}
+        for spec in specs:
+            for s in token_seeds:
+                toks = request_tokens(spec, np.random.default_rng(s),
+                                      cfg.vocab_size)
+                r = cluster.invoke(InvocationRequest(
+                    function=spec.name, tokens=toks,
+                    options=ColdStartOptions(force_cold=True),
+                ))
+                expected[(spec.name, s)] = np.asarray(r.output)
+
+        # one registration guard per function: the op mix deregisters and
+        # re-registers, and a test thread must never double-deregister
+        reg_locks = {spec.name: threading.Lock() for spec in specs}
+        counters = {
+            "submitted": 0, "ok": 0, "invoke_clean": 0,
+            "lifecycle_clean": 0, "mismatches": 0, "unexpected": [],
+        }
+        clock = time.perf_counter
+        counters_lock = threading.Lock()
+        deadline = clock() + SOAK_SECONDS
+        stop = threading.Event()
+
+        def bump(key, n=1):
+            with counters_lock:
+                counters[key] += n
+
+        def is_clean(exc) -> bool:
+            """Errors a racing lifecycle op is *allowed* to produce."""
+            if isinstance(exc, KeyError):
+                return "not registered" in str(exc) or \
+                    any(spec.name in str(exc) for spec in specs)
+            return False
+
+        def run_ops(thread_idx: int):
+            rng = np.random.default_rng(SEED + thread_idx)
+            while not stop.is_set() and clock() < deadline:
+                spec = specs[int(rng.integers(len(specs)))]
+                dice = rng.random()
+                try:
+                    if dice < 0.70:                       # invoke
+                        s = int(rng.choice(token_seeds))
+                        toks = request_tokens(
+                            spec, np.random.default_rng(s), cfg.vocab_size)
+                        strategy = Strategy.AUTO if rng.random() < 0.25 \
+                            else Strategy.SNAPFAAS
+                        bump("submitted")
+                        fut = cluster.submit(InvocationRequest(
+                            function=spec.name, tokens=toks,
+                            options=ColdStartOptions(
+                                strategy=strategy,
+                                force_cold=bool(rng.random() < 0.3)),
+                        ))
+                        try:
+                            r = fut.result(timeout=120)
+                        except Exception as e:  # noqa: BLE001
+                            bump("invoke_clean") if is_clean(e) else \
+                                counters["unexpected"].append(e)
+                            continue
+                        if np.array_equal(np.asarray(r.output),
+                                          expected[(spec.name, s)]):
+                            bump("ok")
+                        else:
+                            bump("mismatches")
+                    elif dice < 0.80:                     # prefetch
+                        cat = str(rng.choice(["ws", "diff", "ws_full"]))
+                        cluster.prefetch_function(spec.name, cat)
+                    elif dice < 0.90:                     # demote
+                        cluster.worker_for(spec.name) \
+                               .registry.demote_function(spec.name)
+                    else:                                 # deregister cycle
+                        lock = reg_locks[spec.name]
+                        if not lock.acquire(blocking=False):
+                            continue
+                        try:
+                            cluster.deregister_function(spec.name)
+                            cluster.register_function(spec)
+                        finally:
+                            lock.release()
+                except Exception as e:  # noqa: BLE001
+                    if is_clean(e):
+                        bump("lifecycle_clean")
+                    else:
+                        counters["unexpected"].append(e)
+
+        threads = [threading.Thread(target=run_ops, args=(i,))
+                   for i in range(N_THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=SOAK_SECONDS + 300)
+            assert not t.is_alive(), "soak thread hung (lost invocations)"
+        stop.set()
+
+        # zero byte-equivalence violations, zero lost invocations, no
+        # unexpected failure modes
+        assert counters["mismatches"] == 0, counters
+        assert not counters["unexpected"], counters["unexpected"][:5]
+        assert counters["ok"] > 0
+        # every submitted invocation resolved: correct output, a clean
+        # lifecycle-race error, or a (zero) mismatch — none lost
+        assert counters["submitted"] == \
+            counters["ok"] + counters["mismatches"] + counters["invoke_clean"]
+
+        # the fleet still serves correctly after the storm: every function
+        # cold-restores byte-identical to the serial ground truth
+        for spec in specs:
+            with reg_locks[spec.name]:
+                if spec.name not in cluster.worker_for(spec.name).specs:
+                    cluster.register_function(spec)
+                s = token_seeds[0]
+                toks = request_tokens(spec, np.random.default_rng(s),
+                                      cfg.vocab_size)
+                r = cluster.invoke(InvocationRequest(
+                    function=spec.name, tokens=toks,
+                    options=ColdStartOptions(force_cold=True),
+                ))
+                np.testing.assert_array_equal(
+                    np.asarray(r.output), expected[(spec.name, s)],
+                    err_msg=spec.name,
+                )
+
+        m = cluster.metrics()
+        assert m["serving"]["n_samples"] > 0
+        assert m["serving"]["n_shed"] == 0     # no admission layer here
