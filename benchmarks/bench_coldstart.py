@@ -396,6 +396,115 @@ def _bench_trace_serving(root: str, n_functions: int, n_rounds: int):
     return lines, payload
 
 
+def _bench_chaos(root: str, n_functions: int, n_rounds: int):
+    """Chaos section: the same seeded trace replayed through a fault-free
+    cluster and through one under the standard fault matrix (1% corrupt
+    reads, a remote-tier outage window, one worker crash mid-replay).
+
+    The recovery machinery (verified reads + repair, retry/backoff, tier
+    circuit breaking, worker failover) must contain the damage: request
+    conservation holds, and the p99 end-to-end latency of *non-faulted*
+    requests (completed without any recovery work on their path) stays
+    within 1.5x of the fault-free baseline."""
+    import threading as _threading
+
+    from repro.core import FaultInjector, chaos_profile
+    from repro.serving import percentiles
+
+    # below saturation (2 workers x concurrency 2): p99 must reflect the
+    # recovery path, not queue buildup amplifying every hiccup
+    n = max(3, min(4, n_functions))
+    rps, duration = 30.0, 2.5
+    seed = 23
+    profile = "standard"
+    adm = AdmissionConfig(queue_depth=32, worker_concurrency=2)
+    trace = make_trace("poisson", rps=rps, duration_s=duration,
+                       n_functions=n, seed=seed)
+
+    def _e2e(results, include_recovered):
+        return [r.queue_s + r.latency_s for r in results
+                if r is not None
+                and (include_recovered or not r.fault_recovered)]
+
+    # fault-free baseline row
+    clean, specs = build_cluster_suite(
+        os.path.join(root, "clean"), n_functions=n,
+        tiers=TierSpec(ram_bytes=1 << 30),
+    )
+    with clean:
+        clean_rep = clean.replay_trace(trace, specs, admission=adm,
+                                       time_scale=1.0)
+    baseline = percentiles(_e2e(clean_rep.results, True))
+
+    # chaos run: one shared injector drives tier faults AND worker crashes
+    injector = FaultInjector(chaos_profile(profile, seed=seed))
+    chaos, cspecs = build_cluster_suite(
+        os.path.join(root, "chaos"), n_functions=n,
+        tiers=TierSpec(ram_bytes=1 << 30, faults=injector),
+    )
+    with chaos:
+        # cold-restore under faults: demote every function so remote reads
+        # (and the injected outage window) sit on the replay path
+        for spec in cspecs:
+            chaos.worker_for(spec.name).registry.demote_function(spec.name)
+        down = _threading.Timer(0.1 * duration,
+                                lambda: injector.fail_tier("remote"))
+        heal = _threading.Timer(0.4 * duration,
+                                lambda: injector.heal_tier("remote"))
+        down.start()
+        heal.start()
+        try:
+            rep = chaos.replay_trace(trace, cspecs, admission=adm,
+                                     time_scale=1.0)
+        finally:
+            down.cancel()
+            heal.cancel()
+            injector.heal_tier("remote")
+        m = chaos.metrics()
+
+    nonfaulted = percentiles(_e2e(rep.results, False))
+    p99_ratio = (
+        round(nonfaulted["p99"] / baseline["p99"], 4)
+        if nonfaulted.get("p99") and baseline.get("p99") else None
+    )
+    conservation = (
+        rep.n_submitted == rep.n_completed + rep.n_shed + rep.n_failed
+    )
+    payload = {
+        "config": {
+            "profile": profile, "seed": seed, "n_functions": n,
+            "n_workers": 2, "rps": rps, "duration_s": duration,
+            "time_scale": 1.0, "queue_depth": adm.queue_depth,
+            "worker_concurrency": adm.worker_concurrency,
+            "outage_window_s": [0.1 * duration, 0.4 * duration],
+        },
+        "baseline": clean_rep.summary(),
+        "chaos": rep.summary(),
+        "baseline_e2e_ms": baseline,
+        "nonfaulted_e2e_ms": nonfaulted,
+        "p99_ratio": p99_ratio,
+        # acceptance: recovery cost contained — non-faulted p99 within
+        # 1.5x of the fault-free row (advisory on shared runners)
+        "within_1_5x": bool(p99_ratio is not None and p99_ratio <= 1.5),
+        "conservation_holds": bool(conservation),
+        "failures": rep.failures(),
+        "n_fault_recovered": rep.n_fault_recovered,
+        "health": m["tiers"]["health"],
+        "injected": m.get("chaos", {}),
+        "n_worker_crashes": m["serving"]["n_worker_crashes"],
+        "dead_workers": m["serving"]["dead_workers"],
+    }
+    ratio_txt = f"{p99_ratio:.2f}" if p99_ratio is not None else "n/a"
+    lines = [csv_row(
+        "chaos.nonfaulted_p99", nonfaulted.get("p99", 0.0) * 1e3,
+        f"baseline_p99_ms={baseline.get('p99', 0.0)};ratio={ratio_txt};"
+        f"recovered={rep.n_fault_recovered};failed={rep.n_failed};"
+        f"crashes={payload['n_worker_crashes']};"
+        f"conserved={int(conservation)}",
+    )]
+    return lines, payload
+
+
 def run(
     n_functions: int = 6,
     n_rounds: int = 5,
@@ -596,6 +705,13 @@ def run(
     )
     lines.extend(trace_lines)
 
+    # Chaos section: standard fault matrix vs the fault-free baseline —
+    # recovery cost and containment under injected faults.
+    chaos_lines, chaos_payload = _bench_chaos(
+        os.path.join(root, "chaos"), n_functions, n_rounds
+    )
+    lines.extend(chaos_lines)
+
     if json_path:
         update_bench_json(json_path, "coldstart", {
             "config": {"n_functions": n_functions, "n_rounds": n_rounds},
@@ -610,6 +726,7 @@ def run(
             "tiers": tiers_payload,
             "dedup": dedup_payload,
             "trace_serving": trace_payload,
+            "chaos": chaos_payload,
         })
     return lines
 

@@ -22,6 +22,21 @@ from .chunkstore import (
     DigestCollisionError,
     IndexCorruptionError,
 )
+from .faults import (
+    CHAOS_PROFILES,
+    ChunkIntegrityError,
+    CircuitBreaker,
+    DeadlineExceededError,
+    FaultError,
+    FaultInjector,
+    FaultMatrix,
+    FaultyTier,
+    RetryPolicy,
+    TierReadError,
+    TierUnavailableError,
+    WorkerCrashError,
+    chaos_profile,
+)
 from .metrics import ColdStartMetrics
 from .planner import (
     PAPER_C220G5,
@@ -78,10 +93,15 @@ from .snapshot import (
 from .workingset import AccessLog, WorkingSet, build_working_set
 
 __all__ = [
-    "AccessLog", "ArrayMeta", "ArrayPatch", "BasePool", "ChunkRef",
-    "ChunkStore", "ColdStartMetrics", "ColdStartPrediction",
-    "DEFAULT_CHUNK_BYTES", "DigestCollisionError", "FunctionRecord",
+    "AccessLog", "ArrayMeta", "ArrayPatch", "BasePool", "CHAOS_PROFILES",
+    "ChunkIntegrityError", "ChunkRef",
+    "ChunkStore", "CircuitBreaker", "ColdStartMetrics", "ColdStartPrediction",
+    "DEFAULT_CHUNK_BYTES", "DeadlineExceededError", "DigestCollisionError",
+    "FaultError", "FaultInjector", "FaultMatrix", "FaultyTier",
+    "FunctionRecord",
     "INDEX_VERSION", "IndexCorruptionError",
+    "RetryPolicy", "TierReadError", "TierUnavailableError",
+    "WorkerCrashError", "chaos_profile",
     "MaterializedArray", "manifest_digests", "synthesize_full",
     "PAPER_C220G5", "PLANNED_STRATEGIES", "PackTier", "PrefetchStats",
     "RamCacheTier", "RemoteTier", "RestoredInstance", "RestorePlan",

@@ -654,6 +654,16 @@ class ChunkStore:
         m = self._pack_mmap(loc.pack, need_end=loc.offset + loc.size)
         return m[loc.offset : loc.offset + loc.size]
 
+    def verify_chunk(self, ref: ChunkRef) -> bool:
+        """Does the stored payload still hash to its digest?  (Scrub /
+        quarantine probe; False covers both corruption and absence.)"""
+        if ref.zero:
+            return True
+        try:
+            return chunk_digest(self.get_chunk(ref)) == ref.digest
+        except (KeyError, IOError, OSError):
+            return False
+
     def read_batch(
         self, refs: Sequence[ChunkRef]
     ) -> Dict[str, bytes]:

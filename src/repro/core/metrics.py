@@ -64,6 +64,11 @@ class ColdStartMetrics:
     tier_bytes: Dict[str, int] = field(default_factory=dict)
     remote_fetch_s: float = 0.0
     promoted_bytes: int = 0
+    # recovery work the B phase absorbed (fault injection / real faults):
+    # tier-read retries beyond the first attempt, and chunks healed from
+    # another tier or a shared base after a failed or corrupt read
+    read_retries: int = 0
+    repaired_chunks: int = 0
 
     @property
     def boot_latency(self) -> float:
@@ -108,6 +113,9 @@ class ColdStartMetrics:
             r["tier_bytes"] = dict(self.tier_bytes)
             r["remote_fetch_ms"] = round(self.remote_fetch_s * 1e3, 3)
             r["promoted_bytes"] = self.promoted_bytes
+        if self.read_retries or self.repaired_chunks:
+            r["read_retries"] = self.read_retries
+            r["repaired_chunks"] = self.repaired_chunks
         return r
 
 

@@ -93,9 +93,18 @@ class TieredStorageModel(StorageModel):
     per-tier stream times over the eager set's actual residency split —
     not their sum.  Bytes in the split not covered by a modelled tier fall
     back to the flat ``bw_store``/``lat_store`` constants.
+
+    Residency splits may carry ``"<tier>!down"`` buckets — bytes whose
+    holding tier's circuit breaker is open (see
+    :meth:`~repro.core.tiers.TieredChunkStore.residency`).  Those bytes
+    are priced at ``outage_penalty_s`` on top of the tier's healthy stream
+    time: retries, breaker probes and repair reads make a dead tier
+    catastrophically slow, and pricing it so is exactly what steers
+    ``Strategy.AUTO`` toward strategies that avoid the dead tier.
     """
 
     tiers: Tuple[TierModel, ...] = ()
+    outage_penalty_s: float = 30.0
 
     def eager_time(
         self,
@@ -120,6 +129,10 @@ class TieredStorageModel(StorageModel):
             covered += b
             if b:
                 t = max(t, tm.stream_time(b))
+            bd = split.get(tm.name + "!down", 0)
+            if bd:
+                covered += bd
+                t = max(t, self.outage_penalty_s + tm.stream_time(bd))
         rest = nbytes - covered
         if rest > 0:
             t = max(t, self.lat_store + rest / self.bw_store)

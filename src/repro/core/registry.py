@@ -96,6 +96,13 @@ class ZygoteRegistry:
         self.bases: Dict[str, SnapshotManifest] = {}
         self.pools: Dict[str, BasePool] = {}
         self.functions: Dict[str, FunctionRecord] = {}
+        # the RAM-resident base pools double as a repair source: a base
+        # chunk lost or corrupted in every stream tier re-synthesizes from
+        # the pool's bytes (digest-verified by the store before it is
+        # served or re-registered)
+        self._base_index: Optional[Dict[str, Tuple[str, Any, int]]] = None
+        self._base_index_lock = threading.Lock()
+        self.store.add_fallback_source(self._base_chunk_payload)
 
     # -- bootstrap ----------------------------------------------------------
 
@@ -118,7 +125,37 @@ class ZygoteRegistry:
         self.store.pin(manifest_digests(base), owner=base.snapshot_id)
         self.bases[family] = base
         self.pools[family] = BasePool.load(self.store, base)
+        with self._base_index_lock:
+            self._base_index = None     # rebuilt lazily over the new base
         return base
+
+    def _base_chunk_payload(self, ref: ChunkRef) -> Optional[bytes]:
+        """Repair source for the tiered store: re-synthesize a base-content
+        chunk from the RAM-resident base pools.  Returns ``None`` for
+        digests that are not base content — the store then gives up and
+        raises typed."""
+        with self._base_index_lock:
+            index = self._base_index
+            if index is None:
+                index = {}
+                for family, base in self.bases.items():
+                    for path, meta in base.arrays.items():
+                        for i, cref in enumerate(meta.chunks):
+                            if cref is not None and not cref.zero:
+                                index.setdefault(cref.digest,
+                                                 (family, path, i))
+                self._base_index = index
+        entry = index.get(ref.digest)
+        if entry is None:
+            return None
+        family, path, idx = entry
+        pool = self.pools.get(family)
+        if pool is None:
+            return None
+        try:
+            return bytes(pool.chunk_bytes_of(path, idx))
+        except (KeyError, IndexError):
+            return None
 
     # -- registration ---------------------------------------------------------
 

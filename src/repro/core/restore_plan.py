@@ -283,6 +283,8 @@ def execute_restore_plan(
         m.tier_bytes = stats.tier_bytes
         m.remote_fetch_s = stats.remote_fetch_s
         m.promoted_bytes = stats.promoted_bytes
+        m.read_retries = stats.retries
+        m.repaired_chunks = stats.repaired_chunks
     else:
         store.read_batch_into(dests)
     m.t_eager = t.lap()

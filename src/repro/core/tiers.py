@@ -36,9 +36,17 @@ import os
 import threading
 import time
 from collections import OrderedDict
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import (
+    FIRST_COMPLETED,
+    Future,
+    ThreadPoolExecutor,
+    TimeoutError as _FutureTimeout,
+    wait as _wait_futures,
+)
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
 
 from .chunkstore import (
     COALESCE_GAP,
@@ -47,6 +55,17 @@ from .chunkstore import (
     ChunkStore,
     PackWriter,
     _get_io_pool,
+    chunk_digest,
+    digest_many,
+)
+from .faults import (
+    ChunkIntegrityError,
+    CircuitBreaker,
+    DeadlineExceededError,
+    FaultInjector,
+    RetryPolicy,
+    TierReadError,
+    TierUnavailableError,
 )
 
 # RAM-tier reads above this size fan the memcpys across the I/O pool:
@@ -68,6 +87,23 @@ def _get_fetch_pool() -> ThreadPoolExecutor:
     return _fetch_pool
 
 
+# Hedged remote fetches run on their own small pool: the primary attempt may
+# already be occupying a tier-fetch thread, and a hedge queued behind it on
+# the same pool could never win the race it exists to run.
+_hedge_pool: Optional[ThreadPoolExecutor] = None
+_hedge_lock = threading.Lock()
+
+
+def _get_hedge_pool() -> ThreadPoolExecutor:
+    global _hedge_pool
+    with _hedge_lock:
+        if _hedge_pool is None:
+            _hedge_pool = ThreadPoolExecutor(
+                max_workers=4, thread_name_prefix="tier-hedge"
+            )
+    return _hedge_pool
+
+
 @dataclass(frozen=True)
 class TierSpec:
     """Configuration of a worker's storage hierarchy."""
@@ -77,6 +113,11 @@ class TierSpec:
     remote_bw: float = 1.2e9            # bytes/s — simulated object store
     remote_lat: float = 5e-3            # s per fetch request
     promote_on_fetch: bool = True       # remote hits promote downward
+    #: digest-verify every chunk read; corrupt payloads are quarantined and
+    #: repaired from another tier / a shared base, never silently served
+    verify_reads: bool = True
+    retry: Optional[RetryPolicy] = None     # None → RetryPolicy() defaults
+    faults: Optional[FaultInjector] = None  # chaos: wrap stream tiers
 
 
 @dataclass
@@ -87,6 +128,10 @@ class TierReadStats:
     tier_bytes: Dict[str, int] = field(default_factory=dict)
     remote_fetch_s: float = 0.0
     promoted_bytes: int = 0
+    retries: int = 0            # tier-read attempts beyond the first
+    repaired_chunks: int = 0    # chunks healed from another tier / base
+    repaired_bytes: int = 0
+    verify_failures: int = 0    # digest mismatches detected
 
     def add(self, tier: str, chunks: int, nbytes: int) -> None:
         self.tier_chunks[tier] = self.tier_chunks.get(tier, 0) + chunks
@@ -329,16 +374,29 @@ class TieredChunkStore:
         self.spec = spec or TierSpec()
         self._lock = threading.Lock()   # before any tier that may call back
         self.residency_epoch = 0
+        self.faults = self.spec.faults
+        self.retry = self.spec.retry or RetryPolicy()
+        self._retry_lock = threading.Lock()
+        self._retry_rng = np.random.default_rng(0x5EED)
         self.local = ChunkStore(root)
         self.pack = PackTier(self.local)
+        if self.faults is not None:
+            self.pack = self.faults.wrap_tier(self.pack)
         # RAM-tier removals (LRU evictions, discards) are tier movement
         # like any other: advertise them on the residency epoch so a
         # plan's tier_split can never silently claim an evicted digest
         self.ram = RamCacheTier(self.spec.ram_bytes,
                                 on_residency_change=self._bump_epoch)
+        # per-stream-tier health gates; a state transition is placement
+        # information (an open remote breaker reprices every restore plan),
+        # so it rides the same residency-epoch bus as tier movement
+        self.breakers: Dict[str, CircuitBreaker] = {
+            t: CircuitBreaker(t, on_state_change=self._on_breaker_change)
+            for t in ("local", "remote")
+        }
         remote_root = self.spec.remote_root or os.path.join(root, "remote")
         self._remote_root = remote_root
-        self._remote: Optional[RemoteTier] = None
+        self._remote = None
         if os.path.isdir(os.path.join(remote_root, "packs")):
             self._remote = self._make_remote()
         self._promote_pack: Optional[PackWriter] = None
@@ -349,14 +407,29 @@ class TieredChunkStore:
         self.demoted_bytes = 0
         self.prefetched_bytes = 0
         self.prefetch_fetch_s = 0.0
+        self.prefetch_skipped_chunks = 0
+        # recovery accounting (surfaced via tier_stats()["health"])
+        self.verified_chunks = 0
+        self.verify_failures = 0
+        self.repaired_chunks = 0
+        self.repaired_bytes = 0
+        self.read_retries = 0
+        self.fail_fast_reads = 0
+        self.hedged_fetches = 0
+        self.hedge_wins = 0
+        self.quarantined: set = set()           # (digest, tier) pairs
+        self._fallback_sources: List = []       # ref -> Optional[bytes]
 
     # ------------------------------------------------------------ tier admin
 
-    def _make_remote(self) -> RemoteTier:
-        return RemoteTier(
+    def _make_remote(self):
+        remote = RemoteTier(
             ChunkStore(self._remote_root),
             bw=self.spec.remote_bw, lat=self.spec.remote_lat,
         )
+        if self.faults is not None:
+            return self.faults.wrap_tier(remote)
+        return remote
 
     @property
     def remote(self) -> RemoteTier:
@@ -383,21 +456,41 @@ class TieredChunkStore:
 
     def residency(self, refs: Sequence[ChunkRef]) -> Dict[str, int]:
         """Bytes of ``refs`` resident per tier (zero chunks excluded; each
-        digest counted once — this is the planner's Eq. 1 input)."""
+        digest counted once — this is the planner's Eq. 1 input).
+
+        A tier whose circuit breaker is open reports under ``"<tier>!down"``
+        so the planner can price reads against a dead tier at its outage
+        penalty instead of its healthy bandwidth — that is how breaker state
+        steers ``Strategy.AUTO`` and ``restore_plan`` around the outage."""
         split: Dict[str, int] = {}
         seen = set()
+        down = {t for t, b in self.breakers.items() if b.is_open}
         for ref in refs:
             if ref.zero or ref.digest in seen:
                 continue
             seen.add(ref.digest)
             tier = self.tier_of(ref.digest)
             if tier is not None:
-                split[tier] = split.get(tier, 0) + ref.size
+                key = tier + "!down" if tier in down else tier
+                split[key] = split.get(key, 0) + ref.size
         return split
 
     def _bump_epoch(self) -> None:
         with self._lock:
             self.residency_epoch += 1
+
+    def _on_breaker_change(self, name: str, state: str) -> None:
+        # breaker transitions change what a read of this tier costs: cached
+        # restore plans and AUTO's Eq. 1 tables must re-derive their splits
+        self._bump_epoch()
+
+    def add_fallback_source(self, source) -> None:
+        """Register a last-resort repair source: ``source(ref) -> bytes | None``
+        re-synthesizes a chunk payload from outside the tier hierarchy (the
+        registry wires in the shared base pool, so base-content chunks heal
+        even when every stream tier has lost or corrupted them)."""
+        with self._lock:
+            self._fallback_sources.append(source)
 
     # -------------------------------------------------- movement: demote/up
 
@@ -530,18 +623,38 @@ class TieredChunkStore:
                 continue
             fetch.append(ref)
         if fetch:
-            remote = self.remote
             bufs = [bytearray(r.size) for r in fetch]
             t0 = time.perf_counter()
-            remote.read_into(
-                [(r, memoryview(b)) for r, b in zip(fetch, bufs)]
-            )
-            stats.remote_fetch_s = time.perf_counter() - t0
-            remote_items = [(r, bytes(b)) for r, b in zip(fetch, bufs)]
-            self._promote_payloads(remote_items, to_ram=to_ram)
-            stats.remote_bytes = sum(r.size for r in fetch)
-            stats.prefetched_bytes += stats.remote_bytes
-            stats.prefetched_chunks += len(fetch)
+            try:
+                self._remote_read(
+                    [(r, memoryview(b)) for r, b in zip(fetch, bufs)]
+                )
+            except (KeyError, TierReadError):
+                # prefetch is best-effort warming: a dead or raced remote
+                # tier must not fail registration — skip the remote set and
+                # let the cold start demand-fault whatever it truly needs
+                self.prefetch_skipped_chunks += len(fetch)
+                fetch = []
+            if fetch:
+                stats.remote_fetch_s = time.perf_counter() - t0
+                remote_items = [(r, bytes(b)) for r, b in zip(fetch, bufs)]
+                if self.spec.verify_reads:
+                    # never promote an unverified payload into the warm
+                    # tiers; corrupt fetches are dropped (demand reads
+                    # repair them properly later)
+                    digests = digest_many([p for _, p in remote_items])
+                    bad = sum(1 for (r, _), d in zip(remote_items, digests)
+                              if d != r.digest)
+                    if bad:
+                        self.verify_failures += bad
+                        remote_items = [
+                            (r, p) for (r, p), d in zip(remote_items, digests)
+                            if d == r.digest
+                        ]
+                self._promote_payloads(remote_items, to_ram=to_ram)
+                stats.remote_bytes = sum(r.size for r, _ in remote_items)
+                stats.prefetched_bytes += stats.remote_bytes
+                stats.prefetched_chunks += len(remote_items)
         if stats.prefetched_chunks:
             self._bump_epoch()
         self.prefetched_bytes += stats.prefetched_bytes
@@ -615,6 +728,291 @@ class TieredChunkStore:
         if self._remote is not None:
             self._remote.store.save_index()
 
+    # ------------------------------------------- fault-tolerant tier reads
+    #
+    # Every stream-tier read funnels through _local_read/_remote_read:
+    # retries with backoff under the policy's deadline, per-tier circuit
+    # breaking (the remote breaker fails fast while open; the local tier
+    # has nowhere to fail over to wholesale, so its breaker only reports
+    # health), and — for remote — optional hedged fetches.  Payload
+    # verification and quarantine-and-repair sit above, in
+    # read_batch_into/get_chunk.
+
+    def _backoff(self, attempt: int) -> float:
+        with self._retry_lock:
+            return self.retry.backoff_s(attempt, self._retry_rng)
+
+    def _local_read(
+        self,
+        items: Sequence[Tuple[ChunkRef, memoryview]],
+        *,
+        parallel: bool = True,
+        coalesce_gap: int = COALESCE_GAP,
+        stats: Optional[TierReadStats] = None,
+    ) -> int:
+        """Pack-tier read with retry/backoff.  ``KeyError`` (an index race
+        with concurrent tier movement) passes through untouched — the
+        caller's re-classify fallback owns that case; only medium faults
+        (IOError and kin) are retried and, exhausted, surface typed."""
+        breaker = self.breakers["local"]
+        policy = self.retry
+        deadline = time.monotonic() + policy.deadline_s
+        last: Optional[BaseException] = None
+        for attempt in range(policy.max_attempts):
+            try:
+                n = self.pack.read_into(
+                    items, parallel=parallel, coalesce_gap=coalesce_gap
+                )
+                breaker.record_success()
+                return n
+            except KeyError:
+                raise
+            except (IOError, OSError, TierUnavailableError) as exc:
+                last = exc
+                breaker.record_failure()
+                if attempt + 1 >= policy.max_attempts:
+                    break
+                self.read_retries += 1
+                if stats is not None:
+                    stats.retries += 1
+                delay = self._backoff(attempt)
+                if time.monotonic() + delay >= deadline:
+                    raise DeadlineExceededError(
+                        [r.digest for r, _ in items], "local", exc)
+                time.sleep(delay)
+        raise TierReadError([r.digest for r, _ in items], "local", last)
+
+    def _local_get(self, ref: ChunkRef) -> bytes:
+        """Single-chunk demand-fault read from the local tier, with the same
+        retry/breaker discipline as :meth:`_local_read`.  Reads through
+        ``self.local.get_chunk`` (not the pack scatter path) so a demote
+        racing the caller's residency check surfaces as ``KeyError`` for
+        re-classification, exactly as before the fault layer existed."""
+        breaker = self.breakers["local"]
+        policy = self.retry
+        deadline = time.monotonic() + policy.deadline_s
+        last: Optional[BaseException] = None
+        for attempt in range(policy.max_attempts):
+            try:
+                if self.faults is not None:
+                    self.faults.before_read("local", [(ref, None)])
+                payload = self.local.get_chunk(ref)
+                if self.faults is not None:
+                    buf = bytearray(payload)
+                    self.faults.after_read("local", [(ref, memoryview(buf))])
+                    payload = bytes(buf)
+                breaker.record_success()
+                return payload
+            except KeyError:
+                raise
+            except (IOError, OSError, TierUnavailableError) as exc:
+                last = exc
+                breaker.record_failure()
+                if attempt + 1 >= policy.max_attempts:
+                    break
+                self.read_retries += 1
+                delay = self._backoff(attempt)
+                if time.monotonic() + delay >= deadline:
+                    raise DeadlineExceededError([ref.digest], "local", exc)
+                time.sleep(delay)
+        raise TierReadError([ref.digest], "local", last)
+
+    def _remote_read(
+        self,
+        items: Sequence[Tuple[ChunkRef, memoryview]],
+        *,
+        stats: Optional[TierReadStats] = None,
+    ) -> int:
+        """Remote-tier read: breaker-gated, retried, optionally hedged.
+
+        Each attempt lands in scratch buffers and is copied into the caller
+        views only on success, so an abandoned hedge (or a failed attempt)
+        can never partially fill a destination the restore will map."""
+        remote = self.remote
+        breaker = self.breakers["remote"]
+        policy = self.retry
+        digests = [r.digest for r, _ in items]
+        if not breaker.allow():
+            self.fail_fast_reads += len(items)
+            raise TierUnavailableError(
+                digests, "remote", "circuit breaker open")
+        deadline = time.monotonic() + policy.deadline_s
+        last: Optional[BaseException] = None
+        for attempt in range(policy.max_attempts):
+            scratch = [(r, memoryview(bytearray(r.size))) for r, _ in items]
+            try:
+                n = self._remote_attempt(remote, scratch)
+            except KeyError:
+                # index race with tier movement: the tier answered, it just
+                # no longer holds the digest — the caller re-classifies
+                raise
+            except (IOError, OSError, TierUnavailableError) as exc:
+                last = exc
+                breaker.record_failure()
+                if attempt + 1 >= policy.max_attempts or breaker.is_open:
+                    break
+                self.read_retries += 1
+                if stats is not None:
+                    stats.retries += 1
+                delay = self._backoff(attempt)
+                if time.monotonic() + delay >= deadline:
+                    raise DeadlineExceededError(digests, "remote", exc)
+                time.sleep(delay)
+            else:
+                breaker.record_success()
+                for (_, sv), (_, dv) in zip(scratch, items):
+                    dv[:] = sv
+                return n
+        if time.monotonic() >= deadline:
+            raise DeadlineExceededError(digests, "remote", last)
+        raise TierReadError(digests, "remote", last)
+
+    def _remote_attempt(self, remote, scratch) -> int:
+        hedge_after = self.retry.hedge_after_s
+        if hedge_after is None:
+            return remote.read_into(scratch)
+        pool = _get_hedge_pool()
+        first = pool.submit(remote.read_into, scratch)
+        try:
+            return first.result(timeout=hedge_after)
+        except _FutureTimeout:
+            pass
+        # primary is dragging its tail: race a duplicate fetch against it,
+        # first success wins (the loser writes into buffers nobody reads)
+        self.hedged_fetches += 1
+        shadow = [(r, memoryview(bytearray(r.size))) for r, _ in scratch]
+        second = pool.submit(remote.read_into, shadow)
+        pending = {first, second}
+        while pending:
+            done, pending = _wait_futures(pending, return_when=FIRST_COMPLETED)
+            for fut in done:
+                if fut.exception() is None:
+                    if fut is second:
+                        self.hedge_wins += 1
+                        for (_, sv), (_, dv) in zip(shadow, scratch):
+                            dv[:] = sv
+                    return fut.result()
+        return first.result()   # both failed: surface the primary's error
+
+    # -------------------------------------- verification + quarantine/repair
+
+    def _verify_views(
+        self,
+        checks: Sequence[Tuple[ChunkRef, memoryview, str]],
+        *,
+        stats: Optional[TierReadStats] = None,
+    ) -> None:
+        """Digest-check freshly filled destination views; mismatches are
+        repaired in place (or raise :class:`ChunkIntegrityError`)."""
+        if not checks:
+            return
+        digests = digest_many([v for _, v, _ in checks])
+        self.verified_chunks += len(checks)
+        for (ref, view, tier), got in zip(checks, digests):
+            if got != ref.digest:
+                self.verify_failures += 1
+                if stats is not None:
+                    stats.verify_failures += 1
+                self._recover_chunk(ref, view, tier,
+                                    corrupt=True, stats=stats)
+
+    def _read_candidate(self, src: str, ref: ChunkRef) -> Optional[bytes]:
+        """Best-effort raw read of one repair candidate.  Deliberately
+        bypasses the fault wrappers (verification already guarantees
+        correctness; re-injecting faults into repair would loop) — except
+        that an injected *outage* still applies: a down tier has no
+        readable medium for repair either."""
+        try:
+            if src == "ram":
+                return self.ram.get(ref.digest)
+            if src == "local":
+                if self.faults is not None and self.faults.tier_down("local"):
+                    return None
+                if ref.digest in self.local:
+                    return self.local.get_chunk(ref)
+                return None
+            if src == "remote":
+                if self._remote is None or not self._remote.has(ref.digest):
+                    return None
+                if self.faults is not None and self.faults.tier_down("remote"):
+                    return None
+                return self._remote.store.get_chunk(ref)
+            if src == "base":
+                with self._lock:
+                    sources = list(self._fallback_sources)
+                for fn in sources:
+                    payload = fn(ref)
+                    if payload is not None:
+                        return payload
+        except (KeyError, IOError, OSError):
+            return None
+        return None
+
+    def _quarantine(self, ref: ChunkRef, tier: str) -> None:
+        """Make a corrupt stored copy unreachable (it can never be served;
+        a later repair re-registers a verified payload in its place)."""
+        self.quarantined.add((ref.digest, tier))
+        if tier == "ram":
+            self.ram.discard([ref.digest])
+        elif tier == "local":
+            self.local.forget([ref.digest])
+            self._bump_epoch()
+        elif tier == "remote" and self._remote is not None:
+            self._remote.store.forget([ref.digest])
+            self._bump_epoch()
+
+    def _recover_chunk(
+        self,
+        ref: ChunkRef,
+        view: memoryview,
+        bad_tier: str,
+        *,
+        corrupt: bool,
+        stats: Optional[TierReadStats] = None,
+    ) -> None:
+        """Heal one chunk whose read failed (``corrupt=False``) or failed
+        verification (``corrupt=True``).
+
+        A corrupt read retries its own tier first — injected faults corrupt
+        the read in flight, not the stored payload, so a same-tier re-read
+        is the cheapest repair; only a copy that is corrupt *at rest* gets
+        quarantined.  Then warmer-to-colder through the other tiers and
+        finally the registered base sources.  Every candidate is verified
+        before it is served; if nothing verifies, the read raises typed —
+        :class:`ChunkIntegrityError` when a corrupt copy was seen,
+        :class:`TierReadError` when the data was simply unreachable."""
+        saw_corrupt = corrupt
+        tried: List[str] = []
+        sources = ([bad_tier] if corrupt else [])
+        sources += [t for t in ("ram", "local", "remote", "base")
+                    if t != bad_tier]
+        for src in sources:
+            payload = self._read_candidate(src, ref)
+            if payload is None:
+                continue
+            tried.append(src)
+            if len(payload) == ref.size and chunk_digest(payload) == ref.digest:
+                view[:] = payload
+                self.repaired_chunks += 1
+                self.repaired_bytes += ref.size
+                if stats is not None:
+                    stats.repaired_chunks += 1
+                    stats.repaired_bytes += ref.size
+                payload = bytes(payload)
+                self.ram.put(ref.digest, payload)   # verified → warm again
+                if src in ("remote", "base") and ref.digest not in self.local:
+                    self._track_promotion(_get_fetch_pool().submit(
+                        self._promote_payloads, [(ref, payload)]
+                    ))
+                return
+            saw_corrupt = True
+            self._quarantine(ref, src)
+        if saw_corrupt:
+            raise ChunkIntegrityError(ref.digest, ref.size,
+                                      tried or [bad_tier])
+        raise TierReadError([ref.digest], bad_tier,
+                            "no readable copy in any tier or base")
+
     # ------------------------------------------------------------- read path
 
     def __contains__(self, digest: str) -> bool:
@@ -660,37 +1058,62 @@ class TieredChunkStore:
         (a demote can forget a local digest between the ``in`` check and
         the pack read), so a tier-level miss re-classifies through the
         whole hierarchy before giving up — a chunk is only ``KeyError``
-        when *no* tier holds it (i.e. it was genuinely reclaimed)."""
+        when *no* tier holds it (i.e. it was genuinely reclaimed).
+
+        Reads go through the retried/breaker-gated tier paths and are
+        digest-verified before they are served or cached."""
         if ref.zero:
             return b"\x00" * ref.size
         for _attempt in range(2):
-            payload = self.ram.get(ref.digest)
-            if payload is not None:
-                return payload
-            if ref.digest in self.local:
-                try:
-                    payload = self.local.get_chunk(ref)
-                except KeyError:
-                    payload = None  # demoted between lookup and read
-                if payload is not None:
-                    self.ram.put(ref.digest, payload)
-                    return payload
-            if self._remote is not None and self._remote.has(ref.digest):
-                buf = bytearray(ref.size)
-                try:
-                    self._remote.read_into([(ref, memoryview(buf))])
-                except KeyError:
-                    continue    # moved again mid-flight: re-classify
+            got = self._read_one(ref)
+            if got is None:
+                continue    # movement race: re-classify once more
+            payload, tier = got
+            if self.spec.verify_reads and chunk_digest(payload) != ref.digest:
+                self.verify_failures += 1
+                buf = bytearray(payload)
+                self._recover_chunk(ref, memoryview(buf), tier, corrupt=True)
                 payload = bytes(buf)
-                if self.spec.promote_on_fetch:
-                    # off the faulting request's critical path, like the
-                    # batch promotion — the D phase pays the remote link,
-                    # not the pack append/flush
-                    self._track_promotion(_get_fetch_pool().submit(
-                        self._promote_payloads, [(ref, payload)]
-                    ))
-                return payload
+            if tier != "ram":
+                self.ram.put(ref.digest, payload)
+            if tier == "remote" and self.spec.promote_on_fetch:
+                # off the faulting request's critical path, like the batch
+                # promotion — the D phase pays the remote link, not the
+                # pack append/flush
+                self._track_promotion(_get_fetch_pool().submit(
+                    self._promote_payloads, [(ref, payload)]
+                ))
+            return payload
         raise KeyError(ref.digest)
+
+    def _read_one(self, ref: ChunkRef) -> Optional[Tuple[bytes, str]]:
+        """One classification pass of the demand-fault path: ``(payload,
+        tier)`` from the warmest holder, or ``None`` on a movement race."""
+        payload = self.ram.get(ref.digest)
+        if payload is not None:
+            return payload, "ram"
+        if ref.digest in self.local:
+            try:
+                payload = self._local_get(ref)
+            except KeyError:
+                return None     # demoted between lookup and read
+            except TierReadError:
+                buf = bytearray(ref.size)
+                view = memoryview(buf)
+                self._recover_chunk(ref, view, "local", corrupt=False)
+                payload = bytes(buf)
+            return payload, "local"
+        if self._remote is not None and self._remote.has(ref.digest):
+            buf = bytearray(ref.size)
+            view = memoryview(buf)
+            try:
+                self._remote_read([(ref, view)])
+            except KeyError:
+                return None     # moved again mid-flight: re-classify
+            except TierReadError:
+                self._recover_chunk(ref, view, "remote", corrupt=False)
+            return bytes(buf), "remote"
+        return None
 
     def read_batch(self, refs: Sequence[ChunkRef]) -> Dict[str, bytes]:
         """Legacy digest→payload batched read, tier-aware."""
@@ -708,13 +1131,27 @@ class TieredChunkStore:
                 out[ref.digest] = self.get_chunk(ref)  # remote (throttled)
         if local_refs:
             try:
-                out.update(self.local.read_batch(local_refs))
+                fetched = self.local.read_batch(local_refs)
             except KeyError:
                 # a concurrent demote moved chunks between classification
                 # and the read — re-fault each through the full hierarchy
                 for ref in local_refs:
                     if ref.digest not in out:
                         out[ref.digest] = self.get_chunk(ref)
+            else:
+                if self.spec.verify_reads and fetched:
+                    by_digest = {r.digest: r for r in local_refs}
+                    keys = list(fetched)
+                    digests = digest_many([fetched[k] for k in keys])
+                    for key, got in zip(keys, digests):
+                        if got != key:
+                            self.verify_failures += 1
+                            ref = by_digest[key]
+                            buf = bytearray(ref.size)
+                            self._recover_chunk(ref, memoryview(buf),
+                                                "local", corrupt=True)
+                            fetched[key] = bytes(buf)
+                out.update(fetched)
         return out
 
     def read_batch_into(
@@ -733,6 +1170,12 @@ class TieredChunkStore:
         and RAM hits memcpy while both are in flight.  Remote payloads are
         promoted downward in the background (unless ``promote=False``).
         Returns bytes read across all tiers.
+
+        Stream-tier reads are retried and breaker-gated; once every stream
+        lands, each filled destination is digest-verified and corrupt or
+        unreadable chunks are healed from another tier or a registered
+        base source (:meth:`add_fallback_source`) — a restore either maps
+        byte-correct payloads or raises typed, never wrong bytes.
         """
         if promote is None:
             promote = self.spec.promote_on_fetch
@@ -773,15 +1216,15 @@ class TieredChunkStore:
         t_remote = 0.0
         local_fallback = False
         if remote_items:
-            remote = self.remote
             remote_future = _get_fetch_pool().submit(
-                remote.read_into, remote_items
+                self._remote_read, remote_items, stats=stats
             )
             t_remote = time.perf_counter()
         if local_items:
             try:
-                total += self.pack.read_into(
-                    local_items, parallel=parallel, coalesce_gap=coalesce_gap
+                total += self._local_read(
+                    local_items, parallel=parallel,
+                    coalesce_gap=coalesce_gap, stats=stats,
                 )
             except KeyError:
                 # a concurrent demote() moved chunks between classification
@@ -793,6 +1236,14 @@ class TieredChunkStore:
                     local_items, parallel=parallel,
                     coalesce_gap=coalesce_gap, stats=stats, promote=promote,
                 )
+            except TierReadError:
+                # the pack medium kept failing past the retry budget —
+                # heal chunk by chunk from the other tiers / base sources
+                local_fallback = True
+                for ref, view in local_items:
+                    self._recover_chunk(ref, view, "local",
+                                        corrupt=False, stats=stats)
+                total += sum(r.size for r, _ in local_items)
         ram_bytes = sum(len(p) for _, _, p in ram_items)
         if parallel and ram_bytes > _RAM_PARALLEL_BYTES and len(ram_items) > 1:
             # ctypes.memmove releases the GIL, so fanned-out copies overlap
@@ -818,15 +1269,33 @@ class TieredChunkStore:
         if remote_future is not None:
             try:
                 total += remote_future.result()
-            except KeyError:
+            except KeyError as exc:
                 # the remote index changed between classification and the
                 # read (e.g. a racing movement) — re-classify and
-                # re-dispatch, like the local fallback above
+                # re-dispatch, like the local fallback above.  A second
+                # miss means the chunks are genuinely gone everywhere:
+                # surface that typed (chunk ids + tier + cause), not as a
+                # bare KeyError the caller cannot classify.
                 remote_fallback = True
-                total += self.read_batch_into(
-                    remote_items, parallel=parallel,
-                    coalesce_gap=coalesce_gap, stats=stats, promote=promote,
-                )
+                try:
+                    total += self.read_batch_into(
+                        remote_items, parallel=parallel,
+                        coalesce_gap=coalesce_gap, stats=stats,
+                        promote=promote,
+                    )
+                except KeyError as exc2:
+                    raise TierReadError(
+                        [r.digest for r, _ in remote_items], "remote", exc2
+                    ) from exc
+            except TierReadError:
+                # remote link down / retries exhausted: heal chunk by chunk
+                # (warm tiers, then base sources) instead of failing the
+                # whole restore on one dead tier
+                remote_fallback = True
+                for ref, view in remote_items:
+                    self._recover_chunk(ref, view, "remote",
+                                        corrupt=False, stats=stats)
+                total += sum(r.size for r, _ in remote_items)
             t_remote = time.perf_counter() - t_remote
             if promote and not remote_fallback:
                 pairs = [
@@ -841,6 +1310,18 @@ class TieredChunkStore:
                 self._track_promotion(
                     _get_fetch_pool().submit(self._promote_payloads, pairs)
                 )
+        if self.spec.verify_reads:
+            # verify once per primary destination, after every stream has
+            # landed and before dup copies fan the payloads out.  Fallback
+            # re-dispatches verified (or healed) their own chunks already.
+            checks: List[Tuple[ChunkRef, memoryview, str]] = [
+                (r, v, "ram") for r, v, _ in ram_items
+            ]
+            if not local_fallback:
+                checks += [(r, v, "local") for r, v in local_items]
+            if not remote_fallback:
+                checks += [(r, v, "remote") for r, v in remote_items]
+            self._verify_views(checks, stats=stats)
         for digest, view in dup:
             view[:] = primary[digest]
         if stats is not None:
@@ -901,7 +1382,22 @@ class TieredChunkStore:
             "prefetched_bytes": self.prefetched_bytes,
             "prefetch_fetch_s": round(self.prefetch_fetch_s, 6),
             "residency_epoch": self.residency_epoch,
+            "health": {
+                "breakers": {t: b.stats() for t, b in self.breakers.items()},
+                "verified_chunks": self.verified_chunks,
+                "verify_failures": self.verify_failures,
+                "repaired_chunks": self.repaired_chunks,
+                "repaired_bytes": self.repaired_bytes,
+                "quarantined_chunks": len(self.quarantined),
+                "read_retries": self.read_retries,
+                "fail_fast_reads": self.fail_fast_reads,
+                "hedged_fetches": self.hedged_fetches,
+                "hedge_wins": self.hedge_wins,
+                "prefetch_skipped_chunks": self.prefetch_skipped_chunks,
+            },
         }
         if self._remote is not None:
             out["remote"] = self._remote.stats()
+        if self.faults is not None:
+            out["faults"] = self.faults.counters_snapshot()
         return out

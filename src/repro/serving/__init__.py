@@ -1,5 +1,6 @@
 from .api import (
     ColdStartOptions,
+    FailureKind,
     InvocationRequest,
     InvocationResult,
     NpzSourceResolver,
@@ -45,6 +46,7 @@ from .trace import (
 
 __all__ = [
     "AdmissionConfig", "AdmissionController", "Cluster", "ColdStartOptions",
+    "FailureKind",
     "FunctionSpec", "GDSFPolicy", "InstancePool", "InvocationRequest",
     "InvocationResult", "InvocationTrace", "LRUPolicy", "NpzSourceResolver",
     "PoolPolicy", "RequestResult", "ShedError", "SourceResolver", "Strategy",

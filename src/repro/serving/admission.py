@@ -104,7 +104,8 @@ class _Lane:
         self.waiting = 0          # admitted, not yet executing
         self.running = 0
         self.submitted = 0
-        self.completed = 0
+        self.completed = 0        # resolved (successfully or with an error)
+        self.failed = 0           # subset of completed that raised
         self.shed = 0
         self.max_waiting = 0
         self.max_running = 0
@@ -115,6 +116,7 @@ class _Lane:
                 "worker_id": self.worker_id,
                 "submitted": self.submitted,
                 "completed": self.completed,
+                "failed": self.failed,
                 "shed": self.shed,
                 "waiting": self.waiting,
                 "running": self.running,
@@ -192,6 +194,10 @@ class AdmissionController:
             lane.max_running = max(lane.max_running, lane.running)
         try:
             return self.cluster._run(request, submitted_t)
+        except BaseException:
+            with lane.lock:
+                lane.failed += 1
+            raise
         finally:
             with lane.lock:
                 lane.running -= 1
@@ -206,6 +212,7 @@ class AdmissionController:
             "worker_concurrency": self.config.worker_concurrency,
             "submitted": sum(l["submitted"] for l in lanes),
             "completed": sum(l["completed"] for l in lanes),
+            "failed": sum(l["failed"] for l in lanes),
             "shed": sum(l["shed"] for l in lanes),
             "max_queue_depth": max((l["max_queue_depth"] for l in lanes),
                                    default=0),

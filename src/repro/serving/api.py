@@ -66,6 +66,39 @@ class Strategy(str, enum.Enum):
         return tuple(s for s in cls if s is not cls.AUTO)
 
 
+class FailureKind(str, enum.Enum):
+    """Typed failure taxonomy of the serving layer.
+
+    Every submitted request resolves to exactly one terminal bucket —
+    ``completed`` (possibly :attr:`FAULT_RECOVERED`), :attr:`SHED`,
+    :attr:`TIMEOUT` or :attr:`FAULT_FATAL` — so the conservation invariant
+    ``submitted == completed + shed + failed`` stays checkable under
+    injected faults.
+    """
+
+    #: refused at admission (queue full) — no work was attempted
+    SHED = "shed"
+    #: failed with a deadline/timeout error (e.g. the retry policy's
+    #: per-request deadline expired against a stalled tier)
+    TIMEOUT = "timeout"
+    #: completed successfully, but only after recovery work (tier-read
+    #: retries, chunk repair, or worker failover) — latency is suspect
+    FAULT_RECOVERED = "fault_recovered"
+    #: failed terminally: unrecoverable fault (integrity, dead tiers,
+    #: all workers down, or an unexpected error)
+    FAULT_FATAL = "fault_fatal"
+
+    def __str__(self) -> str:
+        return self.value
+
+    @classmethod
+    def classify(cls, exc: BaseException) -> "FailureKind":
+        """Bucket a raised invocation error (shed is handled upstream)."""
+        if isinstance(exc, TimeoutError):
+            return cls.TIMEOUT
+        return cls.FAULT_FATAL
+
+
 def select_strategy(
     sizes: SnapshotSizes, hw: StorageModel
 ) -> Tuple["Strategy", Dict["Strategy", ColdStartPrediction]]:
@@ -144,6 +177,9 @@ class InvocationResult:
     worker_id: int = 0
     metrics: Optional[ColdStartMetrics] = None
     output: Any = None
+    #: the request completed, but recovery work happened on its path
+    #: (tier-read retries, chunk repair, or a worker failover re-dispatch)
+    fault_recovered: bool = False
 
 
 @runtime_checkable

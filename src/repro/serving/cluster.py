@@ -33,6 +33,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.faults import WorkerCrashError
 from repro.core.planner import PAPER_C220G5, StorageModel
 from repro.core.tiers import TierSpec
 from repro.models import Model
@@ -42,7 +43,12 @@ from repro.serving.admission import (
     ShedError,
     percentiles,
 )
-from repro.serving.api import ColdStartOptions, InvocationRequest, InvocationResult
+from repro.serving.api import (
+    ColdStartOptions,
+    FailureKind,
+    InvocationRequest,
+    InvocationResult,
+)
 from repro.serving.loadgen import InvocationTrace
 from repro.serving.policy import PoolPolicy
 from repro.serving.worker import FunctionSpec, Worker
@@ -105,6 +111,15 @@ class Cluster:
         self.n_requests = 0
         self.n_cold = 0
         self.n_shed = 0
+        # typed failure taxonomy (FailureKind buckets) + worker health
+        self.n_timeout = 0
+        self.n_fault_fatal = 0
+        self.n_fault_recovered = 0
+        self.n_worker_crashes = 0
+        self._dead: set = set()             # worker_ids detected crashed
+        # failover state: re-registration material for surviving workers
+        self._specs: Dict[str, FunctionSpec] = {}
+        self._runtimes: Dict[str, Tuple[Model, object]] = {}
         self.queue_s_total = 0.0
         # (queue_s, boot_s, exec_s, e2e_s, cold) per completed request —
         # the serving-percentile sample window
@@ -117,6 +132,7 @@ class Cluster:
     def register_runtime(self, family: str, model: Model, base_params) -> None:
         """Cluster-manager replication: every worker gets the family's base
         snapshot and jitted step (paper Fig. 4 bootstrap)."""
+        self._runtimes[family] = (model, base_params)
         for w in self.workers:
             w.register_runtime(family, model, base_params)
 
@@ -136,6 +152,9 @@ class Cluster:
         try:
             w = self.worker_for(spec.name)
             w.register_function(spec)
+            # keep the spec for worker failover: queued requests re-home
+            # onto a surviving shard by re-registering from this record
+            self._specs[spec.name] = spec
             return w
         finally:
             lock.release()
@@ -157,6 +176,7 @@ class Cluster:
         reclaimed chunks."""
         lock = self._acquire_flight(fn)
         try:
+            self._specs.pop(fn, None)
             freed = self.worker_for(fn).deregister_function(fn)
         finally:
             # retire the lock object while still holding it, so any waiter
@@ -168,8 +188,75 @@ class Cluster:
             lock.release()
         return freed
 
+    def alive_workers(self) -> List[Worker]:
+        """Workers not detected as crashed.  With every worker dead, the
+        full list is returned so invocations surface the crash error
+        instead of dying on an empty shard space."""
+        with self._results_lock:
+            dead = set(self._dead)
+        alive = [w for w in self.workers if w.worker_id not in dead]
+        return alive or self.workers
+
     def worker_for(self, fn: str) -> Worker:
-        return self.workers[_shard_of(fn, len(self.workers))]
+        """Home shard over the *alive* workers: a detected crash re-shards
+        its functions onto the survivors (stable hashing, so a given
+        function lands on one deterministic survivor)."""
+        alive = self.alive_workers()
+        return alive[_shard_of(fn, len(alive))]
+
+    # -- worker failure detection + failover ----------------------------------
+
+    def _mark_dead(self, worker_id: int) -> None:
+        with self._results_lock:
+            if worker_id not in self._dead:
+                self._dead.add(worker_id)
+                self.n_worker_crashes += 1
+
+    def _ensure_registered(self, worker: Worker, fn: str) -> None:
+        """Lazy failover re-registration, under ``fn``'s single-flight lock.
+
+        After a crash re-shards ``fn`` onto a survivor, the first request
+        to arrive there (each queued re-dispatch included) finds the
+        function missing and replays its registration from the cluster's
+        spec record.  Doing this lazily — on the request path, under the
+        lock the request already holds — sidesteps the deadlock an eager
+        mass re-registration would risk (it would need *other* functions'
+        flight locks while their holders wait on failover state)."""
+        if fn in worker.specs:
+            return
+        spec = self._specs.get(fn)
+        if spec is None:
+            return      # never registered: worker.invoke raises the KeyError
+        if spec.family not in worker.models:
+            runtime = self._runtimes.get(spec.family)
+            if runtime is not None:
+                worker.register_runtime(spec.family, *runtime)
+        worker.register_function(spec)
+
+    def _invoke_with_failover(
+        self, request: InvocationRequest
+    ) -> Tuple[InvocationResult, bool]:
+        """Invoke on the current home shard, failing over on worker
+        crashes.  Returns ``(result, crash_recovered)``; raises
+        :class:`~repro.core.faults.WorkerCrashError` only when every
+        worker is down."""
+        fn = request.function
+        crash_recovered = False
+        last: Optional[WorkerCrashError] = None
+        for _ in range(len(self.workers)):
+            worker = self.worker_for(fn)
+            self._ensure_registered(worker, fn)
+            try:
+                return worker.invoke(request), crash_recovered
+            except WorkerCrashError as exc:
+                # detection: mark the worker dead (conserved in metrics),
+                # then re-dispatch onto the next survivor — the request is
+                # not lost, it pays the re-registration as recovery work
+                self._mark_dead(worker.worker_id)
+                crash_recovered = True
+                last = exc
+        raise last if last is not None else WorkerCrashError(
+            -1, "no workers available")
 
     # -- invocation -----------------------------------------------------------
 
@@ -198,7 +285,6 @@ class Cluster:
             lock.release()
 
     def _run(self, request: InvocationRequest, submitted: float) -> InvocationResult:
-        worker = self.worker_for(request.function)
         # single-flight: concurrent requests to one function serialise, so
         # at most one cold start per function is in flight; followers hit
         # the warm instance the leader just pooled.
@@ -208,13 +294,26 @@ class Cluster:
             # blocked behind a leader's cold boot reports that time here,
             # not as a suspiciously instant warm latency_s
             queue_s = time.perf_counter() - submitted
-            result = worker.invoke(request)
+            result, crash_recovered = self._invoke_with_failover(request)
+        except ShedError:
+            raise
+        except BaseException as exc:
+            kind = FailureKind.classify(exc)
+            with self._results_lock:
+                if kind is FailureKind.TIMEOUT:
+                    self.n_timeout += 1
+                else:
+                    self.n_fault_fatal += 1
+            raise
         finally:
             lock.release()
-        result = dataclasses.replace(result, queue_s=queue_s)
+        recovered = crash_recovered or result.fault_recovered
+        result = dataclasses.replace(result, queue_s=queue_s,
+                                     fault_recovered=recovered)
         with self._results_lock:
             self.n_requests += 1
             self.n_cold += int(result.cold)
+            self.n_fault_recovered += int(recovered)
             self.queue_s_total += queue_s
             self._samples.append((
                 queue_s, result.boot_s, result.exec_s,
@@ -321,10 +420,21 @@ class Cluster:
         with self._results_lock:
             samples = list(self._samples)
             n_shed = self.n_shed
+            failures = {
+                str(FailureKind.SHED): self.n_shed,
+                str(FailureKind.TIMEOUT): self.n_timeout,
+                str(FailureKind.FAULT_RECOVERED): self.n_fault_recovered,
+                str(FailureKind.FAULT_FATAL): self.n_fault_fatal,
+            }
+            dead_workers = sorted(self._dead)
+            n_worker_crashes = self.n_worker_crashes
         cold = [s for s in samples if s[4]]
         out = {
             "n_samples": len(samples),
             "n_shed": n_shed,
+            "failures": failures,
+            "dead_workers": dead_workers,
+            "n_worker_crashes": n_worker_crashes,
             "e2e_ms": percentiles([s[3] for s in samples]),
             "queue_ms": percentiles([s[0] for s in samples]),
             "exec_ms": percentiles([s[2] for s in samples]),
@@ -336,10 +446,13 @@ class Cluster:
         return out
 
     def metrics(self) -> Dict:
+        with self._results_lock:
+            dead = set(self._dead)
         per_worker = []
         for w in self.workers:
             per_worker.append({
                 "worker_id": w.worker_id,
+                "alive": w.worker_id not in dead,
                 "functions": sorted(w.specs),
                 "pool": w.pool.stats(),
                 "tiers": w.tier_stats(),
@@ -372,6 +485,18 @@ class Cluster:
             "remote_fetched_bytes": sum(r["fetched_bytes"] for r in remote),
             "remote_fetch_s": round(sum(r["fetch_s"] for r in remote), 6),
         }
+        # fleet recovery view: verification/repair/retry work the storage
+        # hierarchy absorbed (all zeros on a fault-free run)
+        health_rows = [t.get("health", {}) for t in tier_stats]
+        tiers["health"] = {
+            key: sum(h.get(key, 0) for h in health_rows)
+            for key in (
+                "verified_chunks", "verify_failures", "repaired_chunks",
+                "repaired_bytes", "quarantined_chunks", "read_retries",
+                "fail_fast_reads", "hedged_fetches", "hedge_wins",
+                "prefetch_skipped_chunks",
+            )
+        }
         # fleet dedup view: what a per-function (flat) store would hold vs
         # the unique bytes the content-addressed stores actually hold
         dedup_rows = [pw["dedup"] for pw in per_worker]
@@ -383,7 +508,14 @@ class Cluster:
             "dedup_ratio": round(unique / referenced, 4) if referenced else 1.0,
             "shared_digests": sum(d["shared_digests"] for d in dedup_rows),
         }
-        return {
+        # injected-fault counters: the injector is shared through the tier
+        # spec, so any worker's handle reports the whole run's injections
+        chaos = None
+        for w in self.workers:
+            if getattr(w, "faults", None) is not None:
+                chaos = w.faults.counters_snapshot()
+                break
+        out = {
             "n_workers": len(self.workers),
             "n_requests": n_req,
             "n_cold": n_cold,
@@ -404,6 +536,9 @@ class Cluster:
             "dedup": dedup,
             "per_worker": per_worker,
         }
+        if chaos is not None:
+            out["chaos"] = chaos
+        return out
 
     def shutdown(self) -> None:
         self._executor.shutdown(wait=True)
@@ -449,6 +584,37 @@ class TraceReplayReport:
     def n_failed(self) -> int:
         return len(self.errors)
 
+    @property
+    def n_timeout(self) -> int:
+        """Failures in the TIMEOUT bucket (deadline/timeout errors)."""
+        return sum(
+            1 for _, e in self.errors
+            if FailureKind.classify(e) is FailureKind.TIMEOUT
+        )
+
+    @property
+    def n_fault_fatal(self) -> int:
+        """Failures that were terminal faults (everything non-timeout)."""
+        return self.n_failed - self.n_timeout
+
+    @property
+    def n_fault_recovered(self) -> int:
+        """Completed requests that needed recovery work (retries, chunk
+        repair, or worker failover) on their path."""
+        return sum(1 for r in self.results
+                   if r is not None and r.fault_recovered)
+
+    def failures(self) -> Dict[str, int]:
+        """The typed failure taxonomy, one count per FailureKind bucket
+        (fault_recovered counts *completed* requests, so it is not part of
+        the conservation sum)."""
+        return {
+            str(FailureKind.SHED): self.n_shed,
+            str(FailureKind.TIMEOUT): self.n_timeout,
+            str(FailureKind.FAULT_RECOVERED): self.n_fault_recovered,
+            str(FailureKind.FAULT_FATAL): self.n_fault_fatal,
+        }
+
     def completed(self) -> List[InvocationResult]:
         return [r for r in self.results if r is not None]
 
@@ -463,6 +629,7 @@ class TraceReplayReport:
             "n_completed": self.n_completed,
             "n_shed": self.n_shed,
             "n_failed": self.n_failed,
+            "failures": self.failures(),
             "n_cold": len(cold),
             "wall_s": round(self.wall_s, 4),
             "offered_rps": round(self.trace.mean_rps, 3),

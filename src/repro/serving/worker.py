@@ -92,6 +92,8 @@ class Worker:
         self.pool = InstancePool(pool_budget_bytes, policy=pool_policy)
         self.storage = storage              # deployment tier for Eq. 1 (AUTO)
         self.worker_id = worker_id
+        # chaos: the tier spec's injector also drives worker-crash faults
+        self.faults = tiers.faults if tiers is not None else None
         self.prefetch_on_register = prefetch_on_register
         self.models: Dict[str, Model] = {}
         self.specs: Dict[str, FunctionSpec] = {}
@@ -341,6 +343,10 @@ class Worker:
         resolved through the planner), execution, pool re-admission."""
         fn = request.function
         opts = request.options
+        if self.faults is not None:
+            # injected worker crashes surface here, before any work — a
+            # crashed worker fails every invocation until failed over
+            self.faults.before_invoke(self.worker_id)
         spec = self.specs.get(fn)
         if spec is None:
             # requests queued behind a deregistration land here — a clear
@@ -391,13 +397,17 @@ class Worker:
         )
         pooled = self.pool.put(fn, inst, nbytes,
                                cost=self.predicted_cost(fn, strategy))
+        m = inst.metrics if cold else None
         return InvocationResult(
             function=fn, cold=cold, requested=Strategy.coerce(opts.strategy),
             strategy=strategy,
             latency_s=time.perf_counter() - t0, boot_s=boot if cold else 0.0,
             exec_s=exec_s, pooled=pooled, worker_id=self.worker_id,
-            metrics=inst.metrics if cold else None,
+            metrics=m,
             output=np.asarray(logits[:, -1, :8]),
+            fault_recovered=bool(
+                m is not None and (m.read_retries or m.repaired_chunks)
+            ),
         )
 
     def _loaders(self, spec: FunctionSpec):

@@ -10,11 +10,13 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     AccessLog,
+    ChunkIntegrityError,
     ChunkRef,
     ChunkStore,
     DigestCollisionError,
     INDEX_VERSION,
     IndexCorruptionError,
+    TierSpec,
     ZygoteRegistry,
     flatten_pytree,
     manifest_digests,
@@ -487,6 +489,129 @@ class TestServingDelta:
         assert "fn" not in w_delta.registry.functions
         with pytest.raises(KeyError):
             w_delta.invoke(InvocationRequest(function="fn", tokens=toks))
+
+
+# ------------------------------------------------- at-rest pack corruption
+
+def _flip_on_disk(store, digest):
+    """Flip one byte of ``digest``'s stored payload in its pack file.
+    ChunkStore maps packs with ``ACCESS_READ`` (shared), so the rot is
+    visible through live mmaps — the on-disk bit-rot scenario."""
+    loc = store.local.location(digest)
+    path = os.path.join(store.local.root, "packs", f"{loc.pack}.pack")
+    with open(path, "r+b") as f:
+        f.seek(loc.offset)
+        orig = f.read(1)
+        f.seek(loc.offset)
+        f.write(bytes([orig[0] ^ 0xFF]))
+
+
+class TestPackCorruption:
+    """Bit-rot a stored chunk and assert every strategy either repairs it
+    or raises :class:`ChunkIntegrityError` — wrong bytes are never served."""
+
+    def _registry(self, tmp_path, name):
+        reg = ZygoteRegistry(
+            str(tmp_path / name), chunk_bytes=CHUNK,
+            tiers=TierSpec(ram_bytes=0, remote_bw=10e9, remote_lat=0.0),
+        )
+        reg.register_runtime("fam", _tree(0))
+        return reg
+
+    def _register_fn(self, reg, seed=42):
+        rng = np.random.default_rng(seed)
+        delta = {"head/w": rng.standard_normal((64, 64)).astype(np.float32)}
+        reg.register_from_base("fn", "fam", {k: np.array(v)
+                                             for k, v in delta.items()})
+        _touch_all(reg, "fn", extra=delta)
+        full_flat = dict(flatten_pytree(_tree(0)))
+        full_flat.update(delta)
+        return full_flat, delta
+
+    def _diff_refs(self, reg):
+        """The function's own (non-base, non-zero) diff chunks."""
+        base_digests = set(manifest_digests(reg.bases["fam"]))
+        rec = reg.functions["fn"]
+        return [c for a in rec.diff.arrays.values() for c in a.chunks
+                if c is not None and not c.zero
+                and c.digest not in base_digests
+                and c.digest in reg.store.local]
+
+    @pytest.mark.parametrize(
+        "strategy", ("regular", "reap", "seuss", "snapfaas-", "snapfaas")
+    )
+    def test_corrupt_diff_chunk_never_serves_wrong_bytes(
+        self, tmp_path, strategy
+    ):
+        reg = self._registry(tmp_path, f"reg-{strategy}")
+        full_flat, delta = self._register_fn(reg)
+        refs = self._diff_refs(reg)
+        assert refs, "expected at least one private diff chunk"
+        _flip_on_disk(reg.store, refs[0].digest)
+
+        kw = _loaders(full_flat, set(delta))
+        extra = kw if strategy in ("seuss", "regular") else {}
+        from repro.core import PLANNED_STRATEGIES
+        if strategy in PLANNED_STRATEGIES:
+            # the chunk exists nowhere else (no remote copy, not base
+            # content): repair has no source, so the restore REFUSES —
+            # typed, never wrong bytes
+            with pytest.raises(ChunkIntegrityError) as exc:
+                reg.cold_start("fn", strategy, **extra)
+            assert exc.value.digest == refs[0].digest
+            assert (refs[0].digest, "local") in reg.store.quarantined
+        else:
+            # seuss/regular boot from source artifacts, not the store —
+            # the rot is invisible to them and the restore is correct
+            inst = reg.cold_start("fn", strategy, **extra)
+            for path, expected in full_flat.items():
+                np.testing.assert_array_equal(inst.value(path), expected,
+                                              err_msg=f"{strategy}/{path}")
+
+    def test_corrupt_base_chunk_repaired_from_shared_base(self, tmp_path):
+        reg = self._registry(tmp_path, "reg-base")
+        store = reg.store
+        digests = [d for d in manifest_digests(reg.bases["fam"])
+                   if d in store.local]
+        rec_refs = {c.digest: c for a in reg.bases["fam"].arrays.values()
+                    for c in a.chunks if c is not None and not c.zero}
+        digest = next(d for d in digests if d in rec_refs)
+        ref = rec_refs[digest]
+        want = store.get_chunk(ref)
+        _flip_on_disk(store, digest)
+        # verified read catches the rot; the registry's base pool is wired
+        # in as a fallback source, so the chunk is re-synthesized from the
+        # shared base — and the corrupt pack copy is quarantined
+        assert store.get_chunk(ref) == want
+        health = store.tier_stats()["health"]
+        assert health["verify_failures"] >= 1
+        assert health["repaired_chunks"] >= 1
+        assert (digest, "local") in store.quarantined
+
+    def test_corrupt_local_copy_repaired_from_remote(self, tmp_path):
+        reg = self._registry(tmp_path, "reg-dual")
+        self._register_fn(reg)
+        store = reg.store
+        refs = self._diff_refs(reg)
+        ref = refs[0]
+        want = store.get_chunk(ref)
+        # make the chunk dual-resident (remote + local), then rot the
+        # LOCAL copy only
+        store.demote([ref])
+        store.prefetch([ref])
+        store.join_promotions()
+        assert ref.digest in store.local
+        _flip_on_disk(store, ref.digest)
+        assert store.get_chunk(ref) == want     # healed from the remote tier
+        health = store.tier_stats()["health"]
+        assert health["repaired_chunks"] >= 1
+        # full restore still byte-identical after the repair
+        inst = reg.cold_start("fn", "snapfaas")
+        rng = np.random.default_rng(42)
+        np.testing.assert_array_equal(
+            inst.value("head/w"),
+            rng.standard_normal((64, 64)).astype(np.float32),
+        )
 
 
 # ------------------------------------------------------ hypothesis property
