@@ -116,17 +116,20 @@ def build_cluster_suite(root: str, *, n_functions: Optional[int] = None,
                         seed: int = 0, n_workers: int = 2,
                         policy_factory=None, tiers=None,
                         pool_budget_bytes: int = 1 << 30,
-                        max_concurrency: Optional[int] = None):
+                        max_concurrency: Optional[int] = None,
+                        **cluster_kw):
     """Cluster + the same paper-style suite, sharded across ``n_workers``
     (the trace-serving bench substrate: runtime broadcast to every worker,
-    functions registered on their home shards)."""
+    functions registered on their home shards).  Extra keywords (e.g.
+    ``placement``, ``steal``, ``admission``) pass through to
+    :class:`~repro.serving.cluster.Cluster`."""
     from repro.serving.cluster import Cluster
 
     model = build_model(BENCH_CFG)
     cluster = Cluster(os.path.join(root, "cluster"), n_workers=n_workers,
                       chunk_bytes=256 * 1024, policy_factory=policy_factory,
                       tiers=tiers, pool_budget_bytes=pool_budget_bytes,
-                      max_concurrency=max_concurrency)
+                      max_concurrency=max_concurrency, **cluster_kw)
     base_params = model.init(seed)
     cluster.register_runtime(BENCH_CFG.name, model, base_params)
     base_flat = flatten_pytree(jax.tree.map(np.asarray, base_params))

@@ -23,8 +23,25 @@ import tempfile
 from repro.configs import get_config, reduced
 from repro.core import CHAOS_PROFILES, FaultInjector, TierSpec, chaos_profile
 from repro.models import build_model
-from repro.serving import make_trace, TRACE_PATTERNS
+from repro.serving import (
+    AutoscaleConfig,
+    StealConfig,
+    make_trace,
+    TRACE_PATTERNS,
+)
+from repro.serving.scheduler import PLACEMENTS
 from repro.serving.trace import build_cluster
+
+
+def parse_autoscale(value):
+    """``MIN:MAX`` → :class:`AutoscaleConfig` (argparse type hook)."""
+    try:
+        lo, hi = value.split(":")
+        return AutoscaleConfig(min_workers=int(lo), max_workers=int(hi))
+    except (ValueError, TypeError):
+        raise argparse.ArgumentTypeError(
+            f"expected MIN:MAX (e.g. 1:4), got {value!r}"
+        ) from None
 
 
 def main(argv=None) -> int:
@@ -48,6 +65,14 @@ def main(argv=None) -> int:
                          f"({', '.join(CHAOS_PROFILES)})")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="fault-injector seed (same seed → same faults)")
+    ap.add_argument("--placement", default="static", choices=sorted(PLACEMENTS),
+                    help="function→worker placement policy")
+    ap.add_argument("--steal", action="store_true",
+                    help="enable work stealing between admission lanes")
+    ap.add_argument("--autoscale", type=parse_autoscale, default=None,
+                    metavar="MIN:MAX",
+                    help="autoscale the worker fleet between MIN and MAX "
+                         "during the replay (starts at MIN)")
     ap.add_argument("--root", default=None,
                     help="cluster root (default: a fresh temp dir)")
     args = ap.parse_args(argv)
@@ -62,9 +87,14 @@ def main(argv=None) -> int:
     root = args.root or tempfile.mkdtemp(prefix="serve_replay_")
     cfg = reduced(get_config("gemma-2b"))
     model = build_model(cfg)
+    n_workers = args.workers
+    if args.autoscale is not None:
+        n_workers = args.autoscale.min_workers
     cluster, specs = build_cluster(
-        root, cfg, model, n_workers=args.workers,
+        root, cfg, model, n_workers=n_workers,
         n_functions=args.functions, seed=args.seed, tiers=tiers,
+        placement=args.placement,
+        steal=StealConfig() if args.steal else None,
     )
     trace = make_trace(args.pattern, rps=args.rps, duration_s=args.duration,
                        n_functions=len(specs), seed=args.seed)
@@ -78,6 +108,7 @@ def main(argv=None) -> int:
                     spec.name)
             injector.reset_clock()
         rep = cluster.replay_trace(trace, specs, strategy=args.strategy,
+                                   autoscale=args.autoscale,
                                    time_scale=args.time_scale)
         metrics = cluster.metrics()
 
@@ -86,6 +117,7 @@ def main(argv=None) -> int:
         "conservation_holds":
             rep.n_submitted == rep.n_completed + rep.n_shed + rep.n_failed,
         "tier_health": metrics["tiers"]["health"],
+        "scheduler": metrics["scheduler"],
         "serving": {
             "failures": metrics["serving"]["failures"],
             "dead_workers": metrics["serving"]["dead_workers"],

@@ -390,3 +390,38 @@ def plan_restore(
         predicted_eager_s=hw.eager_time(e_bytes),
         predicted_lazy_s=lazy_cost,
     )
+
+
+# ---------------------------------------------------------------------------
+# placement cost terms (Eq. 1 applied to scheduling)
+# ---------------------------------------------------------------------------
+
+def queue_wait_s(depth: int, mean_service_s: float, concurrency: int = 1) -> float:
+    """Expected wait a request pays joining a lane with ``depth`` requests
+    already queued, when the lane drains ``concurrency`` requests at a time
+    with mean service time ``mean_service_s`` — the load half of a
+    placement/stealing decision (the other half is Eq. 1's cold price)."""
+    if depth <= 0:
+        return 0.0
+    return depth * max(mean_service_s, 0.0) / max(concurrency, 1)
+
+
+def steal_breakeven(
+    depth: int,
+    mean_service_s: float,
+    cold_cost_s: float,
+    *,
+    warm: bool = False,
+    concurrency: int = 1,
+) -> bool:
+    """Is pulling a queued request to an idle lane worth it?
+
+    Leaving the request at home pays the expected queue wait
+    (:func:`queue_wait_s`); moving it pays the thief's re-cold-start
+    price — zero if the function is already warm there, else the Eq. 1
+    total the planner predicted for the best strategy.  Steal iff the
+    wait strictly exceeds the price, so a warm thief always wins and a
+    cold thief only wins when the victim's backlog is genuinely more
+    expensive than one more cold start."""
+    price = 0.0 if warm else max(cold_cost_s, 0.0)
+    return queue_wait_s(depth, mean_service_s, concurrency) > price

@@ -33,6 +33,8 @@ from repro.configs import get_config, reduced
 from repro.models import build_model
 from repro.serving import (
     AdmissionConfig,
+    AutoscaleConfig,
+    StealConfig,
     Strategy,
     TRACE_PATTERNS,
     build_cluster,
@@ -42,6 +44,18 @@ from repro.serving import (
     summarize,
 )
 from repro.serving.policy import POLICIES
+from repro.serving.scheduler import PLACEMENTS
+
+
+def _parse_autoscale(value: str) -> AutoscaleConfig:
+    """``MIN:MAX`` → :class:`AutoscaleConfig` (argparse type hook)."""
+    try:
+        lo, hi = value.split(":")
+        return AutoscaleConfig(min_workers=int(lo), max_workers=int(hi))
+    except (ValueError, TypeError):
+        raise argparse.ArgumentTypeError(
+            f"expected MIN:MAX (e.g. 1:4), got {value!r}"
+        ) from None
 
 
 def main() -> None:
@@ -73,6 +87,15 @@ def main() -> None:
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="arrival-time multiplier (0 = replay as fast "
                          "as possible)")
+    ap.add_argument("--placement", default="static",
+                    choices=sorted(PLACEMENTS),
+                    help="function→worker placement policy")
+    ap.add_argument("--steal", action="store_true",
+                    help="enable work stealing between admission lanes")
+    ap.add_argument("--autoscale", type=_parse_autoscale, default=None,
+                    metavar="MIN:MAX",
+                    help="trace mode: autoscale the worker fleet between "
+                         "MIN and MAX during the replay (starts at MIN)")
     ap.add_argument("--root", default=None)
     args = ap.parse_args()
 
@@ -80,9 +103,14 @@ def main() -> None:
     cfg = reduced(get_config(args.family))
     model = build_model(cfg)
 
+    n_workers = args.workers
+    if args.autoscale is not None and args.trace is not None:
+        n_workers = args.autoscale.min_workers
     cluster, fns = build_cluster(
-        root, cfg, model, n_workers=args.workers, n_functions=args.functions,
+        root, cfg, model, n_workers=n_workers, n_functions=args.functions,
         policy_factory=lambda: make_policy(args.policy),
+        placement=args.placement,
+        steal=StealConfig() if args.steal else None,
     )
     if args.trace is not None:
         with cluster:
@@ -103,10 +131,12 @@ def main() -> None:
                     queue_depth=args.queue_depth,
                     worker_concurrency=args.concurrency,
                 ),
+                autoscale=args.autoscale,
                 time_scale=args.time_scale,
             )
             fleet = cluster.metrics()
         print(json.dumps({"trace_serving": report.summary()}, indent=1))
+        print(json.dumps({"scheduler": fleet["scheduler"]}, indent=1))
         print(json.dumps({"serving": fleet["serving"]}, indent=1))
         return
 

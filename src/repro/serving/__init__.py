@@ -22,6 +22,17 @@ from .admission import (
     ShedError,
     percentiles,
 )
+from .scheduler import (
+    AffinityPlacement,
+    AutoscaleConfig,
+    Autoscaler,
+    PLACEMENTS,
+    PlacementPolicy,
+    StaticHashPlacement,
+    StealConfig,
+    WorkerView,
+    make_placement,
+)
 from .loadgen import (
     InvocationTrace,
     TRACE_PATTERNS,
@@ -45,14 +56,19 @@ from .trace import (
 )
 
 __all__ = [
-    "AdmissionConfig", "AdmissionController", "Cluster", "ColdStartOptions",
+    "AdmissionConfig", "AdmissionController", "AffinityPlacement",
+    "AutoscaleConfig", "Autoscaler", "Cluster", "ColdStartOptions",
     "FailureKind",
     "FunctionSpec", "GDSFPolicy", "InstancePool", "InvocationRequest",
     "InvocationResult", "InvocationTrace", "LRUPolicy", "NpzSourceResolver",
-    "PoolPolicy", "RequestResult", "ShedError", "SourceResolver", "Strategy",
+    "PLACEMENTS", "PlacementPolicy", "PoolPolicy", "RequestResult",
+    "ShedError", "SourceResolver", "StaticHashPlacement", "StealConfig",
+    "Strategy",
     "TRACE_PATTERNS", "TTLPolicy", "TraceReplayReport", "TracedArrival",
-    "Worker", "azure_trace", "build_cluster", "build_functions",
-    "diurnal_trace", "make_policy", "make_requests", "make_trace",
+    "Worker", "WorkerView", "azure_trace", "build_cluster",
+    "build_functions",
+    "diurnal_trace", "make_placement", "make_policy", "make_requests",
+    "make_trace",
     "mmpp_trace", "percentiles", "poisson_trace", "replay_cluster_trace",
     "replay_trace", "select_strategy", "summarize", "zipf_schedule",
 ]

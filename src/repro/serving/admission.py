@@ -1,11 +1,11 @@
-"""Admission control: bounded queues and overload shedding in front of
-:class:`~repro.serving.cluster.Cluster`.
+"""Admission control: bounded queues, overload shedding and work stealing
+in front of :class:`~repro.serving.cluster.Cluster`.
 
 Before this layer existed, callers hand-rolled submit loops against the
 cluster's unbounded executor: arrival bursts piled up invisibly, queueing
 delay was indistinguishable from cold-start time, and overload had no
 release valve.  The :class:`AdmissionController` gives the serving path the
-three production behaviours the paper's fleet framing assumes:
+production behaviours the paper's fleet framing assumes:
 
 * **bounded per-worker queues** — each worker shard has its own lane with
   a queue-depth cap; a request that arrives to a full lane is *shed*
@@ -14,11 +14,31 @@ three production behaviours the paper's fleet framing assumes:
 * **concurrency caps** — each lane executes at most
   ``worker_concurrency`` requests at a time, modelling per-machine CPU
   slots; everything else waits *in the queue*, where the wait is measured;
+* **work stealing** — when the cluster carries a
+  :class:`~repro.serving.scheduler.StealConfig`, a lane whose own queue is
+  empty pulls requests from the deepest foreign lane instead of idling,
+  provided the cluster's :meth:`steal_ok` gate approves (function warm on
+  the thief, or its Eq. 1 re-cold-start price beats the expected queue
+  wait; never while the function's single-flight lock is held).  Stolen
+  requests execute pinned to the thief worker, with crash failover intact;
+* **elastic lanes** — the autoscaler can :meth:`add_lane` for a worker it
+  just activated and :meth:`close_lane` for one it retires; a closed
+  lane's queued requests are redistributed to open lanes, never dropped;
 * **timing split** — every admitted request's end-to-end latency is
   decomposed into queueing delay (arrival → execution start, including
   single-flight waits behind a leader's cold boot), cold-start boot and
   execution, so fleet percentiles (p50/p95/p99) can separate "the queue
   was long" from "the restore was slow".
+
+Lanes are explicit deques drained by dedicated lane threads (not
+``ThreadPoolExecutor`` queues, which would hide the backlog from the
+stealing and autoscaling logic).  One controller-wide mutex + condition
+guards all lane state; executions run outside it.  Conservation is the
+load-bearing invariant: across all lanes,
+``submitted == completed + shed + queued + running`` at every instant —
+per-lane counts may diverge under stealing (a request submits to its home
+lane but completes on the thief's), which is why totals, not lanes, are
+what the soak and hypothesis tests assert.
 
 The controller is deliberately a thin, inspectable object — the cluster
 stays usable without it (direct ``submit`` bypasses admission), and the
@@ -28,9 +48,10 @@ replay driver (:meth:`Cluster.replay_trace`) builds one per run.
 from __future__ import annotations
 
 import threading
-from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Sequence, TYPE_CHECKING
 
 import numpy as np
 
@@ -38,6 +59,7 @@ from repro.serving.api import InvocationRequest, InvocationResult
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from repro.serving.cluster import Cluster
+    from repro.serving.scheduler import StealConfig
 
 
 class ShedError(RuntimeError):
@@ -89,40 +111,67 @@ def percentiles(
     }
 
 
+class _Pending:
+    """One admitted request parked in a lane's queue."""
+
+    __slots__ = ("request", "submitted_t", "future", "steal_to")
+
+    def __init__(self, request: InvocationRequest, submitted_t: float,
+                 future: "Future[InvocationResult]"):
+        self.request = request
+        self.submitted_t = submitted_t
+        self.future = future
+        # worker_id the request was stolen to; None means "run at home"
+        self.steal_to: Optional[int] = None
+
+
 class _Lane:
-    """One worker shard's admission lane: a bounded waiting room in front
-    of a fixed-width executor."""
+    """One worker shard's admission lane: a bounded waiting room drained by
+    ``worker_concurrency`` dedicated threads.  All mutable state is guarded
+    by the owning controller's mutex."""
 
     def __init__(self, worker_id: int, cfg: AdmissionConfig):
         self.worker_id = worker_id
         self.cfg = cfg
-        self.executor = ThreadPoolExecutor(
-            max_workers=cfg.worker_concurrency,
-            thread_name_prefix=f"admit-w{worker_id}",
-        )
-        self.lock = threading.Lock()
-        self.waiting = 0          # admitted, not yet executing
+        self.queue: Deque[_Pending] = deque()
+        self.open = True          # closed lanes stop admitting and draining
         self.running = 0
         self.submitted = 0
         self.completed = 0        # resolved (successfully or with an error)
         self.failed = 0           # subset of completed that raised
         self.shed = 0
+        self.steals = 0           # requests this lane pulled from others
+        self.stolen = 0           # requests other lanes pulled from this one
         self.max_waiting = 0
         self.max_running = 0
 
+    @property
+    def occupancy(self) -> int:
+        return len(self.queue) + self.running
+
+    def note_depth(self) -> None:
+        # queue depth = backlog beyond the execution slots (requests a
+        # free thread could not immediately absorb)
+        self.max_waiting = max(
+            self.max_waiting,
+            max(0, len(self.queue) + self.running - self.cfg.worker_concurrency),
+        )
+
     def stats(self) -> Dict[str, int]:
-        with self.lock:
-            return {
-                "worker_id": self.worker_id,
-                "submitted": self.submitted,
-                "completed": self.completed,
-                "failed": self.failed,
-                "shed": self.shed,
-                "waiting": self.waiting,
-                "running": self.running,
-                "max_queue_depth": self.max_waiting,
-                "max_running": self.max_running,
-            }
+        return {
+            "worker_id": self.worker_id,
+            "open": self.open,
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "failed": self.failed,
+            "shed": self.shed,
+            "steals": self.steals,
+            "stolen": self.stolen,
+            "waiting": len(self.queue),
+            "running": self.running,
+            "max_queue_depth": self.max_waiting,
+            "max_running": self.max_running,
+        }
 
 
 class AdmissionController:
@@ -134,79 +183,247 @@ class AdmissionController:
     :class:`ShedError` when the target lane is full.  Counting is
     conservation-checked: ``submitted == completed + shed + failed`` once
     all futures resolve (the soak and hypothesis tests assert this).
+
+    Work stealing engages automatically when the cluster exposes a
+    ``steal`` config and a ``steal_ok`` gate; clusters without them (and
+    test stubs) get plain per-lane behaviour.
     """
 
     def __init__(self, cluster: "Cluster", config: Optional[AdmissionConfig] = None):
         self.cluster = cluster
         self.config = config or AdmissionConfig()
-        self._lanes = [
-            _Lane(w.worker_id, self.config) for w in cluster.workers
-        ]
+        self._mu = threading.Lock()
+        self._cv = threading.Condition(self._mu)
+        self._closing = False
+        self._threads: List[threading.Thread] = []
+        self._steal_cfg: "Optional[StealConfig]" = getattr(cluster, "steal", None)
+        workers = getattr(cluster, "active_workers", None)
+        workers = workers() if callable(workers) else cluster.workers
+        self._lanes: List[_Lane] = []
+        self._by_wid: Dict[int, _Lane] = {}
         self._clock = cluster._clock
+        with self._mu:
+            for w in workers:
+                self._new_lane(w.worker_id)
         # the cluster's fleet metrics surface this controller's stats
         cluster._admission = self
 
+    # -- lane lifecycle (callers: __init__, Autoscaler) -----------------------
+
+    def _new_lane(self, worker_id: int) -> _Lane:
+        """Create (or reopen) a lane and its drain threads.  _mu held."""
+        lane = self._by_wid.get(worker_id)
+        if lane is None:
+            lane = _Lane(worker_id, self.config)
+            self._lanes.append(lane)
+            self._by_wid[worker_id] = lane
+        lane.open = True
+        for i in range(self.config.worker_concurrency):
+            t = threading.Thread(
+                target=self._loop, args=(lane,),
+                name=f"admit-w{worker_id}-{i}", daemon=True,
+            )
+            self._threads.append(t)
+            t.start()
+        return lane
+
+    def add_lane(self, worker) -> None:
+        """Open an admission lane for a newly activated worker (its old
+        threads, if it was retired earlier, have already exited)."""
+        with self._mu:
+            if self._closing:
+                return
+            lane = self._by_wid.get(worker.worker_id)
+            if lane is not None and lane.open:
+                return
+            self._new_lane(worker.worker_id)
+            self._cv.notify_all()
+
+    def close_lane(self, worker_id: int) -> bool:
+        """Close a lane for a worker being retired.  Its queued requests are
+        redistributed to the shallowest open lanes (admitted stays admitted
+        — redistribution ignores the depth bound); its threads finish their
+        in-flight request and exit.  Refuses to close the last open lane."""
+        with self._mu:
+            lane = self._by_wid.get(worker_id)
+            if lane is None or not lane.open:
+                return False
+            if sum(1 for l in self._lanes if l.open) <= 1:
+                return False
+            lane.open = False
+            while lane.queue:
+                p = lane.queue.popleft()
+                tgt = min(
+                    (l for l in self._lanes if l.open),
+                    key=lambda l: (l.occupancy, l.worker_id),
+                )
+                tgt.queue.append(p)
+                tgt.note_depth()
+            self._cv.notify_all()
+            return True
+
     # -- submission -----------------------------------------------------------
 
+    def _open_lane_for(self, function: str) -> _Lane:
+        """The home worker's lane, or — when that lane is closed/missing
+        (autoscale retired the home between placement and submit) — the
+        shallowest open lane.  _mu held."""
+        home = self.cluster.worker_for(function).worker_id
+        lane = self._by_wid.get(home)
+        if lane is not None and lane.open:
+            return lane
+        return min(
+            (l for l in self._lanes if l.open),
+            key=lambda l: (l.occupancy, l.worker_id),
+        )
+
     def lane_for(self, function: str) -> _Lane:
-        # worker_id doubles as the lane index (Cluster numbers its workers
-        # 0..n-1 in construction order)
-        return self._lanes[self.cluster.worker_for(function).worker_id]
+        with self._mu:
+            return self._open_lane_for(function)
 
     def submit(self, request: InvocationRequest) -> "Future[InvocationResult]":
         """Admit (or shed) one request; the returned future resolves to the
         typed result or raises :class:`ShedError`.
 
         The admission bound counts the lane's total occupancy (executing +
-        waiting) against ``worker_concurrency + queue_depth``: a request
-        dispatched to the executor but not yet picked up by a thread still
-        counts as *waiting*, so the bound cannot over-shed during the
-        thread wakeup window, and an idle lane always admits."""
-        lane = self.lane_for(request.function)
+        waiting) against ``worker_concurrency + queue_depth``, so the bound
+        cannot over-shed during a drain-thread wakeup window and an idle
+        lane always admits."""
         cfg = self.config
         submitted_t = self._clock()
-        with lane.lock:
+        shed_exc: Optional[ShedError] = None
+        fut: "Future[InvocationResult]" = Future()
+        with self._mu:
+            if self._closing:
+                raise RuntimeError("cannot submit after shutdown")
+            lane = self._open_lane_for(request.function)
             lane.submitted += 1
-            occupancy = lane.waiting + lane.running
-            if occupancy >= cfg.queue_depth + cfg.worker_concurrency:
+            if lane.occupancy >= cfg.queue_depth + cfg.worker_concurrency:
                 lane.shed += 1
-                fut: "Future[InvocationResult]" = Future()
-                fut.set_exception(ShedError(
-                    request.function, lane.worker_id, lane.waiting
-                ))
-                self.cluster._note_shed()
-                return fut
-            lane.waiting += 1
-            # queue depth = backlog beyond the execution slots (requests a
-            # free thread could not immediately absorb)
-            lane.max_waiting = max(
-                lane.max_waiting,
-                max(0, lane.waiting + lane.running - cfg.worker_concurrency),
-            )
-        return lane.executor.submit(self._execute, lane, request, submitted_t)
+                shed_exc = ShedError(
+                    request.function, lane.worker_id, len(lane.queue)
+                )
+            else:
+                lane.queue.append(_Pending(request, submitted_t, fut))
+                lane.note_depth()
+                self._cv.notify_all()
+        if shed_exc is not None:
+            fut.set_exception(shed_exc)
+            self.cluster._note_shed()
+        return fut
 
-    def _execute(
-        self, lane: _Lane, request: InvocationRequest, submitted_t: float
-    ) -> InvocationResult:
-        with lane.lock:
-            lane.waiting -= 1
-            lane.running += 1
-            lane.max_running = max(lane.max_running, lane.running)
+    # -- draining -------------------------------------------------------------
+
+    def _loop(self, lane: _Lane) -> None:
+        """Drain thread: serve the lane's own queue first, then steal."""
+        while True:
+            with self._mu:
+                while True:
+                    pending = self._next(lane)
+                    if pending is not None:
+                        break
+                    if self._closing or not lane.open:
+                        return
+                    self._cv.wait(timeout=0.1)
+                lane.running += 1
+                lane.max_running = max(lane.max_running, lane.running)
+            self._dispatch(lane, pending)
+
+    def _next(self, lane: _Lane) -> Optional[_Pending]:
+        if lane.queue:
+            return lane.queue.popleft()
+        return self._try_steal(lane)
+
+    def _try_steal(self, thief: _Lane) -> Optional[_Pending]:
+        """Pull the oldest stealable request from the deepest foreign lane.
+        The cluster's ``steal_ok`` gate enforces the warm-or-cheap rule and
+        skips functions whose single-flight lock is busy.  _mu held (the
+        gate only touches cluster-side locks, never this controller's)."""
+        cfg = self._steal_cfg
+        steal_ok = getattr(self.cluster, "steal_ok", None)
+        if cfg is None or steal_ok is None:
+            return None
+        victims = sorted(
+            (l for l in self._lanes
+             if l is not thief and len(l.queue) >= cfg.min_depth),
+            key=lambda l: len(l.queue), reverse=True,
+        )
+        for victim in victims:
+            depth = len(victim.queue)
+            for i, p in enumerate(victim.queue):
+                if steal_ok(thief.worker_id, p.request.function, depth):
+                    del victim.queue[i]
+                    victim.stolen += 1
+                    thief.steals += 1
+                    p.steal_to = thief.worker_id
+                    note = getattr(self.cluster, "_note_steal", None)
+                    if note is not None:
+                        note()
+                    return p
+        return None
+
+    def _dispatch(self, lane: _Lane, p: _Pending) -> None:
         try:
-            return self.cluster._run(request, submitted_t)
-        except BaseException:
-            with lane.lock:
-                lane.failed += 1
-            raise
+            if p.future.set_running_or_notify_cancel():
+                worker = None
+                if p.steal_to is not None:
+                    by_id = getattr(self.cluster, "worker_by_id", None)
+                    worker = by_id(p.steal_to) if by_id is not None else None
+                try:
+                    if worker is not None:
+                        result = self.cluster._run(
+                            p.request, p.submitted_t, worker=worker
+                        )
+                    else:
+                        result = self.cluster._run(p.request, p.submitted_t)
+                    p.future.set_result(result)
+                except BaseException as exc:
+                    with self._mu:
+                        lane.failed += 1
+                    p.future.set_exception(exc)
         finally:
-            with lane.lock:
+            with self._mu:
                 lane.running -= 1
                 lane.completed += 1
+                self._cv.notify_all()
+
+    # -- autoscaler probes ----------------------------------------------------
+
+    def max_open_depth(self) -> int:
+        """Deepest open lane's *queued* backlog (the autoscale signal)."""
+        with self._mu:
+            return max((len(l.queue) for l in self._lanes if l.open),
+                       default=0)
+
+    def shallowest_open_lane(self) -> Optional[int]:
+        """worker_id of the least-loaded open lane (scale-down victim)."""
+        with self._mu:
+            lanes = [l for l in self._lanes if l.open]
+            if len(lanes) <= 1:
+                return None
+            return min(lanes, key=lambda l: (l.occupancy, -l.worker_id)).worker_id
+
+    def lane_depths(self) -> Dict[int, int]:
+        """Live occupancy per open lane (placement's queue-depth signal).
+
+        Deliberately lock-free: the cluster calls this from its placement
+        path, which the submit path reaches while already holding this
+        controller's mutex — taking ``_mu`` here would self-deadlock.  The
+        reads are GIL-atomic ints; placement only needs an advisory
+        snapshot, not a consistent one."""
+        return {l.worker_id: l.occupancy for l in list(self._lanes) if l.open}
+
+    def queue_depth_peaks(self) -> Dict[str, int]:
+        """Per-worker peak queue depth over the controller's lifetime
+        (string keys: this lands in benchmark JSON)."""
+        with self._mu:
+            return {str(l.worker_id): l.max_waiting for l in self._lanes}
 
     # -- metrics / lifecycle --------------------------------------------------
 
     def metrics(self) -> Dict[str, object]:
-        lanes = [lane.stats() for lane in self._lanes]
+        with self._mu:
+            lanes = [lane.stats() for lane in self._lanes]
         return {
             "queue_depth_limit": self.config.queue_depth,
             "worker_concurrency": self.config.worker_concurrency,
@@ -214,14 +431,19 @@ class AdmissionController:
             "completed": sum(l["completed"] for l in lanes),
             "failed": sum(l["failed"] for l in lanes),
             "shed": sum(l["shed"] for l in lanes),
+            "steals": sum(l["steals"] for l in lanes),
             "max_queue_depth": max((l["max_queue_depth"] for l in lanes),
                                    default=0),
             "per_lane": lanes,
         }
 
     def shutdown(self, wait: bool = True) -> None:
-        for lane in self._lanes:
-            lane.executor.shutdown(wait=wait)
+        with self._mu:
+            self._closing = True
+            self._cv.notify_all()
+        if wait:
+            for t in self._threads:
+                t.join(timeout=60.0)
 
     def __enter__(self) -> "AdmissionController":
         return self

@@ -1,9 +1,12 @@
 """Multi-worker scheduler: the paper's fleet view of cold starts.
 
-A :class:`Cluster` shards registered functions across N :class:`Worker`\\ s
-(stable hashing — a function's snapshots, working sets and warm instances
-live on exactly one worker), runs invocations concurrently on an executor,
-and serialises concurrent cold starts of the *same* function behind a
+A :class:`Cluster` places registered functions across N :class:`Worker`\\ s
+through a pluggable :class:`~repro.serving.scheduler.PlacementPolicy`
+(static blake2b hashing by default; affinity-, warmth- and load-aware
+scoring with ``placement="affinity"``) — a function's snapshots, working
+sets and warm instances live on exactly one *home* worker.  Invocations
+run concurrently on an executor sized from the admission caps, and
+concurrent cold starts of the *same* function serialise behind a
 per-function single-flight lock (the second request rides the first boot's
 warm instance instead of duplicating the restore I/O).
 ``deregister_function`` takes the same lock, so garbage collection can
@@ -14,27 +17,32 @@ function.
 request list through the executor as fast as it can, and ``replay_trace``
 replays a timed :class:`~repro.serving.loadgen.InvocationTrace` through an
 :class:`~repro.serving.admission.AdmissionController` (bounded per-worker
-queues, concurrency caps, overload shedding).  ``metrics`` aggregates the
-fleet view — per-worker pool stats, cold/warm counts, and a ``serving``
-section with the p50/p95/p99 end-to-end latency and its queueing-delay /
-boot / execution split.
+queues, concurrency caps, overload shedding, and — when the cluster
+carries a :class:`~repro.serving.scheduler.StealConfig` — work stealing
+between lanes).  Passing an
+:class:`~repro.serving.scheduler.AutoscaleConfig` to ``replay_trace``
+additionally runs a queue-depth-driven autoscaler that grows and shrinks
+the worker fleet between configured bounds during the replay.
+``metrics`` aggregates the fleet view — per-worker pool stats, cold/warm
+counts, a ``scheduler`` section (placement policy, steals, scale events)
+and a ``serving`` section with the p50/p95/p99 end-to-end latency and its
+queueing-delay / boot / execution split.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import os
+import random
 import threading
 import time
-from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.faults import WorkerCrashError
-from repro.core.planner import PAPER_C220G5, StorageModel
+from repro.core.planner import PAPER_C220G5, StorageModel, steal_breakeven
 from repro.core.tiers import TierSpec
 from repro.models import Model
 from repro.serving.admission import (
@@ -48,20 +56,58 @@ from repro.serving.api import (
     FailureKind,
     InvocationRequest,
     InvocationResult,
+    Strategy,
 )
 from repro.serving.loadgen import InvocationTrace
 from repro.serving.policy import PoolPolicy
+from repro.serving.scheduler import (
+    AutoscaleConfig,
+    Autoscaler,
+    PlacementPolicy,
+    StealConfig,
+    WorkerView,
+    _shard_of,          # re-exported: pre-scheduler callers import it here
+    make_placement,
+)
 from repro.serving.worker import FunctionSpec, Worker
 
-#: serving-stat samples kept for percentile reporting (newest win; a soak
-#: run does not grow memory without bound)
+#: serving-stat samples kept for percentile reporting (a soak run does not
+#: grow memory without bound); the window is a uniform reservoir over the
+#: whole run, not a newest-win tail
 _SERVING_SAMPLE_CAP = 65536
 
 
-def _shard_of(name: str, n: int) -> int:
-    """Stable function → worker assignment (survives process restarts)."""
-    h = hashlib.blake2b(name.encode(), digest_size=8).digest()
-    return int.from_bytes(h, "little") % n
+class _Reservoir:
+    """Uniform sample of a stream (Vitter's Algorithm R).
+
+    The previous ``deque(maxlen=cap)`` kept only the *newest* ``cap``
+    samples, so percentiles over a long replay described the run's tail
+    (where queues are drained) instead of the run.  Every arrival now has
+    probability ``cap / n_seen`` of being in the window, independent of
+    when it arrived.  Seeded, so identical replays report identical
+    percentiles.  Callers synchronise externally (the cluster's results
+    lock)."""
+
+    def __init__(self, cap: int, seed: int = 0):
+        self.cap = cap
+        self.n_seen = 0
+        self._items: List = []
+        self._rng = random.Random(seed)
+
+    def add(self, item) -> None:
+        self.n_seen += 1
+        if len(self._items) < self.cap:
+            self._items.append(item)
+        else:
+            j = self._rng.randrange(self.n_seen)
+            if j < self.cap:
+                self._items[j] = item
+
+    def snapshot(self) -> List:
+        return list(self._items)
+
+    def __len__(self) -> int:
+        return len(self._items)
 
 
 class Cluster:
@@ -69,7 +115,14 @@ class Cluster:
 
     ``policy_factory`` builds one fresh :class:`PoolPolicy` per worker
     (policies hold per-worker state, so sharing one instance is wrong);
-    ``None`` keeps each worker's LRU default.
+    ``None`` keeps each worker's LRU default.  ``placement`` picks the
+    function→worker policy (``"static"``/``"affinity"`` or a
+    :class:`PlacementPolicy` instance); ``steal`` enables work stealing
+    between admission lanes (``True`` for defaults, or a
+    :class:`StealConfig`); ``admission`` sets the cluster's default
+    :class:`AdmissionConfig`, which also sizes the shared executor
+    (``n_workers * (worker_concurrency + 2)`` threads, clamped to
+    [8, 128]) so direct submits can't starve the lanes.
     """
 
     def __init__(
@@ -84,9 +137,26 @@ class Cluster:
         max_concurrency: Optional[int] = None,
         tiers: Optional[TierSpec] = None,
         prefetch_on_register: bool = True,
+        placement: "str | PlacementPolicy" = "static",
+        steal: "StealConfig | bool | None" = None,
+        admission: Optional[AdmissionConfig] = None,
     ):
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
+        # ctor material kept so autoscaling can build identical workers
+        self._root = root
+        self._pool_budget_bytes = pool_budget_bytes
+        self._chunk_bytes = chunk_bytes
+        self._policy_factory = policy_factory
+        self._storage = storage
+        self._tiers = tiers
+        self._prefetch_on_register = prefetch_on_register
+        self._max_concurrency = max_concurrency
+        self.placement = make_placement(placement)
+        self.steal: Optional[StealConfig] = (
+            StealConfig() if steal is True else (steal or None)
+        )
+        self._admission_cfg = admission or AdmissionConfig()
         self.workers = [
             Worker(
                 os.path.join(root, f"worker{i}"),
@@ -101,7 +171,7 @@ class Cluster:
             for i in range(n_workers)
         ]
         self._executor = ThreadPoolExecutor(
-            max_workers=max_concurrency or min(32, 4 * n_workers),
+            max_workers=max_concurrency or self._executor_target(n_workers),
             thread_name_prefix="cluster",
         )
         self._flight: Dict[str, threading.Lock] = {}
@@ -119,22 +189,56 @@ class Cluster:
         self._dead: set = set()             # worker_ids detected crashed
         # failover state: re-registration material for surviving workers
         self._specs: Dict[str, FunctionSpec] = {}
-        self._runtimes: Dict[str, Tuple[Model, object]] = {}
+        # family → (model, base_params, shared jitted fwd)
+        self._runtimes: Dict[str, Tuple[Model, object, object]] = {}
+        # scheduling state: sticky home per function + the placement
+        # signals (affinity key, Eq. 1 cost), guarded by the topology lock
+        self._topology = threading.Lock()
+        self._home: Dict[str, int] = {}
+        self._affinity: Dict[str, Optional[str]] = {}
+        self._fn_cost: Dict[str, float] = {}
+        self._retired: set = set()          # worker_ids scaled down (standby)
+        self._next_worker_idx = n_workers
+        self.scale_events: List[Dict] = []
+        self.n_steals = 0
+        self._service_ema: Optional[float] = None   # mean boot+exec (steal gate)
         self.queue_s_total = 0.0
         # (queue_s, boot_s, exec_s, e2e_s, cold) per completed request —
-        # the serving-percentile sample window
-        self._samples: "deque[Tuple[float, float, float, float, bool]]" = \
-            deque(maxlen=_SERVING_SAMPLE_CAP)
+        # a uniform reservoir over the run (see _Reservoir)
+        self._samples = _Reservoir(_SERVING_SAMPLE_CAP)
         self._admission: Optional[AdmissionController] = None
+
+    def _executor_target(self, n_active: int) -> int:
+        """Executor width derived from the admission caps: every lane can
+        run ``worker_concurrency`` requests plus headroom for direct
+        submits, instead of the old ``min(32, 4 * n_workers)`` guess that
+        ignored the configured concurrency entirely."""
+        return max(8, min(128, n_active * (self._admission_cfg.worker_concurrency + 2)))
+
+    def _resize_executor(self) -> None:
+        """Re-derive the executor width after a scale event.  An explicit
+        ``max_concurrency`` is a user cap and is never overridden."""
+        if self._max_concurrency is not None:
+            return
+        target = self._executor_target(len(self.workers) - len(self._retired))
+        # ThreadPoolExecutor spawns threads lazily up to _max_workers, so
+        # raising the bound grows on demand; lowering it only stops new
+        # spawns (surplus idle threads are harmless and die with shutdown)
+        self._executor._max_workers = target
 
     # -- registration (broadcast runtimes, shard functions) -------------------
 
     def register_runtime(self, family: str, model: Model, base_params) -> None:
         """Cluster-manager replication: every worker gets the family's base
-        snapshot and jitted step (paper Fig. 4 bootstrap)."""
-        self._runtimes[family] = (model, base_params)
+        snapshot and a SHARED jitted step (paper Fig. 4 bootstrap) — one
+        compile per (shape, family) process-wide, so work stealing and
+        scale-up never stall a victim's overflow behind a per-worker
+        recompile."""
+        fwd = None
         for w in self.workers:
-            w.register_runtime(family, model, base_params)
+            w.register_runtime(family, model, base_params, fwd=fwd)
+            fwd = w._fwd[family]
+        self._runtimes[family] = (model, base_params, fwd)
 
     def register_function(self, spec: FunctionSpec) -> Worker:
         """Register ``spec`` on its home shard; returns the owning worker.
@@ -150,11 +254,24 @@ class Cluster:
         of observing a half-registered function."""
         lock = self._acquire_flight(spec.name)
         try:
+            with self._topology:
+                # chunk-sharing affinity: siblings registered from one
+                # shared base (delta specs) reference the same content
+                # digests, so the placement policy co-locates them; plain
+                # variants get no key and spread by load
+                self._affinity[spec.name] = (
+                    spec.family if getattr(spec, "delta", None) is not None
+                    else None
+                )
             w = self.worker_for(spec.name)
             w.register_function(spec)
             # keep the spec for worker failover: queued requests re-home
             # onto a surviving shard by re-registering from this record
             self._specs[spec.name] = spec
+            cost = self._predict_cost(w, spec.name)
+            if cost is not None:
+                with self._topology:
+                    self._fn_cost[spec.name] = cost
             return w
         finally:
             lock.release()
@@ -178,6 +295,10 @@ class Cluster:
         try:
             self._specs.pop(fn, None)
             freed = self.worker_for(fn).deregister_function(fn)
+            with self._topology:
+                self._home.pop(fn, None)
+                self._affinity.pop(fn, None)
+                self._fn_cost.pop(fn, None)
         finally:
             # retire the lock object while still holding it, so any waiter
             # that acquires it next fails the _acquire_flight re-check and
@@ -197,12 +318,230 @@ class Cluster:
         alive = [w for w in self.workers if w.worker_id not in dead]
         return alive or self.workers
 
+    def active_workers(self) -> List[Worker]:
+        """Workers not retired by the autoscaler (crashed or not)."""
+        with self._topology:
+            retired = set(self._retired)
+        return [w for w in self.workers if w.worker_id not in retired]
+
+    def active_alive_workers(self) -> List[Worker]:
+        """The placement candidate set: neither crashed nor retired.  Falls
+        back to :meth:`alive_workers` if scale-down and crashes conspire to
+        empty it (an invocation must always have a target to fail on)."""
+        with self._results_lock:
+            dead = set(self._dead)
+        with self._topology:
+            retired = set(self._retired)
+        out = [w for w in self.workers
+               if w.worker_id not in dead and w.worker_id not in retired]
+        return out or self.alive_workers()
+
+    def n_active(self) -> int:
+        return len(self.active_alive_workers())
+
+    def worker_by_id(self, worker_id: int) -> Optional[Worker]:
+        for w in self.workers:
+            if w.worker_id == worker_id:
+                return w
+        return None
+
     def worker_for(self, fn: str) -> Worker:
-        """Home shard over the *alive* workers: a detected crash re-shards
-        its functions onto the survivors (stable hashing, so a given
-        function lands on one deterministic survivor)."""
-        alive = self.alive_workers()
-        return alive[_shard_of(fn, len(alive))]
+        """The function's home worker.  Homes are sticky: once the
+        placement policy assigns one, it holds until the home crashes or
+        is retired, at which point the function is re-placed over the
+        surviving candidates (and the new home sticks in turn).  Stickiness
+        is what makes warm residency and replays deterministic — a
+        function does not migrate just because queue depths moved."""
+        candidates = self.active_alive_workers()
+        with self._topology:
+            home = self._home.get(fn)
+        if home is not None:
+            for w in candidates:
+                if w.worker_id == home:
+                    return w
+        return self._place(fn, candidates)
+
+    def _place(self, fn: str, candidates: List[Worker]) -> Worker:
+        """Run the placement policy over live views and record the home."""
+        if len(candidates) == 1:
+            chosen = candidates[0]
+        else:
+            views = self._views(fn, candidates)
+            wid = self.placement.place(fn, views)
+            chosen = next(
+                (w for w in candidates if w.worker_id == wid), candidates[0]
+            )
+        with self._topology:
+            self._home[fn] = chosen.worker_id
+        return chosen
+
+    def _views(self, fn: str, candidates: List[Worker]) -> List[WorkerView]:
+        """Per-candidate :class:`WorkerView` snapshots: live lane
+        occupancy, homed-function count and summed Eq. 1 cost, warm/
+        registered residency, and sibling count under ``fn``'s affinity
+        key."""
+        adm = self._admission
+        depths = adm.lane_depths() if adm is not None else {}
+        views: List[WorkerView] = []
+        with self._topology:
+            key = self._affinity.get(fn)
+            homed: Dict[int, List[str]] = {}
+            for g, h in self._home.items():
+                homed.setdefault(h, []).append(g)
+            for w in sorted(candidates, key=lambda w: w.worker_id):
+                fns = homed.get(w.worker_id, [])
+                views.append(WorkerView(
+                    worker_id=w.worker_id,
+                    queue_depth=int(depths.get(w.worker_id, 0)),
+                    n_functions=len(fns),
+                    assigned_cost_s=round(
+                        sum(self._fn_cost.get(g, 0.0) for g in fns), 6),
+                    warm=w.pool.contains(fn),
+                    registered=fn in w.specs,
+                    siblings=0 if key is None else sum(
+                        1 for g in fns
+                        if g != fn and self._affinity.get(g) == key
+                    ),
+                ))
+        return views
+
+    @staticmethod
+    def _predict_cost(worker: Worker, fn: str) -> Optional[float]:
+        """The Eq. 1 best-strategy cold total the planner computed at
+        registration (Strategy.AUTO's argmin) — the price a steal or a
+        scale-up pays to run ``fn`` on a fresh worker."""
+        try:
+            return float(worker.predicted_cost(fn, Strategy.AUTO))
+        except Exception:
+            return None
+
+    def predicted_cold_cost(self, fn: str) -> Optional[float]:
+        with self._topology:
+            cost = self._fn_cost.get(fn)
+        if cost is not None:
+            return cost
+        for w in self.workers:
+            if fn in w.specs:
+                return self._predict_cost(w, fn)
+        return None
+
+    # -- work stealing + autoscaling -------------------------------------------
+
+    def steal_ok(self, thief_worker_id: int, fn: str, victim_depth: int) -> bool:
+        """The admission layer's stealing gate: may an idle lane on
+        ``thief_worker_id`` pull a queued request for ``fn`` from a lane
+        ``victim_depth`` deep?
+
+        A warm thief always qualifies — its stolen requests ride the
+        pooled instance through the lock-free warm path, so an in-flight
+        cold start elsewhere is irrelevant.  A cold thief is held to a
+        deeper backlog (``steal.min_cold_depth``: booting a second warm
+        home is an investment, not a free drain), never steals while
+        ``fn``'s single-flight lock is held (the steal would serialise
+        behind the in-flight boot it was meant to dodge), and otherwise
+        only when the Eq. 1 re-cold-start price is small
+        (``steal.max_cold_s``) *and* beaten by the expected queue wait at
+        home (the measured mean service time drives
+        :func:`~repro.core.planner.steal_breakeven`).
+        """
+        cfg = self.steal
+        if cfg is None or victim_depth < cfg.min_depth:
+            return False
+        worker = self.worker_by_id(thief_worker_id)
+        if worker is None:
+            return False
+        if fn in worker.specs and worker.pool.contains(fn):
+            return True
+        if victim_depth < cfg.min_cold_depth:
+            return False
+        with self._flight_guard:
+            lock = self._flight.get(fn)
+        if lock is not None and lock.locked():
+            return False
+        cost = self.predicted_cold_cost(fn)
+        if cost is None or cost > cfg.max_cold_s:
+            return False
+        with self._results_lock:
+            service_s = self._service_ema
+        conc = (self._admission.config.worker_concurrency
+                if self._admission is not None
+                else self._admission_cfg.worker_concurrency)
+        return steal_breakeven(
+            victim_depth, service_s if service_s is not None else 0.05,
+            cost, warm=False, concurrency=conc,
+        )
+
+    def _note_steal(self) -> None:
+        with self._results_lock:
+            self.n_steals += 1
+
+    def _note_scale(self, action: str, worker_id: int, t_s: float,
+                    lane_depth: int) -> None:
+        # topology lock held by callers
+        self.scale_events.append({
+            "t_s": round(t_s, 4),
+            "action": action,
+            "worker_id": worker_id,
+            "n_active": len(self.workers) - len(self._retired),
+            "lane_depth": lane_depth,
+        })
+
+    def scale_up(self, *, t_s: float = 0.0, lane_depth: int = 0) -> Optional[Worker]:
+        """Add one worker to the active fleet.  A retired standby is
+        reactivated first (its packs, pools and jitted families are
+        intact); otherwise a fresh worker is built with the cluster's ctor
+        material and given the runtime broadcast.  Functions arrive on it
+        lazily, through the same failover re-registration path crashes
+        use.  The heavy build runs outside the topology lock so placement
+        is never blocked behind a worker bootstrap."""
+        with self._results_lock:
+            dead = set(self._dead)
+        with self._topology:
+            for w in self.workers:
+                if w.worker_id in self._retired and w.worker_id not in dead:
+                    self._retired.discard(w.worker_id)
+                    self._note_scale("up", w.worker_id, t_s, lane_depth)
+                    self._resize_executor()
+                    return w
+            wid = self._next_worker_idx
+            self._next_worker_idx += 1
+        worker = Worker(
+            os.path.join(self._root, f"worker{wid}"),
+            pool_budget_bytes=self._pool_budget_bytes,
+            chunk_bytes=self._chunk_bytes,
+            pool_policy=self._policy_factory() if self._policy_factory else None,
+            storage=self._storage,
+            worker_id=wid,
+            tiers=self._tiers,
+            prefetch_on_register=self._prefetch_on_register,
+        )
+        for family, (model, params, fwd) in list(self._runtimes.items()):
+            worker.register_runtime(family, model, params, fwd=fwd)
+        with self._topology:
+            self.workers.append(worker)
+            self._note_scale("up", wid, t_s, lane_depth)
+            self._resize_executor()
+        return worker
+
+    def retire_worker(self, worker_id: int, *, t_s: float = 0.0,
+                      lane_depth: int = 0) -> bool:
+        """Remove a worker from the active fleet (scale-down).  The worker
+        is kept as a standby — in-flight requests pinned to it finish, and
+        a later scale-up reactivates it warm — but its homed functions
+        re-place lazily onto the remaining actives on their next request.
+        Refuses to retire the last active worker."""
+        with self._topology:
+            active = [w.worker_id for w in self.workers
+                      if w.worker_id not in self._retired]
+            if worker_id not in active or len(active) <= 1:
+                return False
+            self._retired.add(worker_id)
+            for fn, h in list(self._home.items()):
+                if h == worker_id:
+                    del self._home[fn]
+            self._note_scale("down", worker_id, t_s, lane_depth)
+            self._resize_executor()
+        return True
 
     # -- worker failure detection + failover ----------------------------------
 
@@ -234,17 +573,24 @@ class Cluster:
         worker.register_function(spec)
 
     def _invoke_with_failover(
-        self, request: InvocationRequest
+        self, request: InvocationRequest, first: Optional[Worker] = None
     ) -> Tuple[InvocationResult, bool]:
-        """Invoke on the current home shard, failing over on worker
-        crashes.  Returns ``(result, crash_recovered)``; raises
+        """Invoke on the current home shard — or on ``first`` when a work
+        steal pinned the request to the thief worker — failing over on
+        worker crashes.  Returns ``(result, crash_recovered)``; raises
         :class:`~repro.core.faults.WorkerCrashError` only when every
         worker is down."""
         fn = request.function
         crash_recovered = False
         last: Optional[WorkerCrashError] = None
-        for _ in range(len(self.workers)):
-            worker = self.worker_for(fn)
+        for _ in range(len(self.workers) + 1):
+            worker = None
+            if first is not None:
+                with self._results_lock:
+                    pinned_dead = first.worker_id in self._dead
+                worker, first = (None if pinned_dead else first), None
+            if worker is None:
+                worker = self.worker_for(fn)
             self._ensure_registered(worker, fn)
             try:
                 return worker.invoke(request), crash_recovered
@@ -284,17 +630,62 @@ class Cluster:
                     return lock
             lock.release()
 
-    def _run(self, request: InvocationRequest, submitted: float) -> InvocationResult:
-        # single-flight: concurrent requests to one function serialise, so
-        # at most one cold start per function is in flight; followers hit
-        # the warm instance the leader just pooled.
-        lock = self._acquire_flight(request.function)
+    def _warm_target(self, request: InvocationRequest,
+                     worker: Optional[Worker]) -> Optional[Worker]:
+        """The worker the warm fast path may invoke on without the flight
+        lock, or None when the request must take the locked cold path.
+
+        Warm requests against a pooled instance run concurrently — that is
+        the whole point of ``worker_concurrency`` — so single-flight
+        serialises *cold starts* only.  The residency peek is advisory: an
+        eviction between the peek and the invoke cold-starts unserialised
+        (a duplicate boot at worst — restores read content-addressed
+        chunks, so two in flight waste I/O but corrupt nothing)."""
+        if request.options.force_cold:
+            # a forced cold start IS a cold start: it must serialise under
+            # the flight lock (deregistration GC parks on that lock too)
+            return None
+        target = worker if worker is not None else self.worker_for(
+            request.function)
+        fn = request.function
+        if fn not in target.specs or not target.pool.contains(fn):
+            return None
+        with self._results_lock:
+            if target.worker_id in self._dead:
+                return None
+        return target
+
+    def _run(
+        self, request: InvocationRequest, submitted: float,
+        worker: Optional[Worker] = None,
+    ) -> InvocationResult:
+        # single-flight: concurrent COLD requests to one function
+        # serialise, so at most one cold start per function is in flight;
+        # followers hit the warm instance the leader just pooled.  Warm
+        # requests bypass the lock (see _warm_target).  ``worker`` pins a
+        # stolen request to the thief (failover still applies if it died).
+        lock = None
+        target = self._warm_target(request, worker)
+        if target is None:
+            lock = self._acquire_flight(request.function)
         try:
             # queue_s = executor wait + single-flight wait: a follower
             # blocked behind a leader's cold boot reports that time here,
             # not as a suspiciously instant warm latency_s
             queue_s = time.perf_counter() - submitted
-            result, crash_recovered = self._invoke_with_failover(request)
+            if lock is None:
+                try:
+                    result, crash_recovered = target.invoke(request), False
+                except (WorkerCrashError, KeyError):
+                    # crash or deregistration raced the warm peek: escalate
+                    # to the locked path, whose failover re-registration
+                    # assumes the flight lock is held
+                    lock = self._acquire_flight(request.function)
+                    result, crash_recovered = self._invoke_with_failover(
+                        request, first=worker)
+            else:
+                result, crash_recovered = self._invoke_with_failover(
+                    request, first=worker)
         except ShedError:
             raise
         except BaseException as exc:
@@ -306,7 +697,8 @@ class Cluster:
                     self.n_fault_fatal += 1
             raise
         finally:
-            lock.release()
+            if lock is not None:
+                lock.release()
         recovered = crash_recovered or result.fault_recovered
         result = dataclasses.replace(result, queue_s=queue_s,
                                      fault_recovered=recovered)
@@ -315,10 +707,16 @@ class Cluster:
             self.n_cold += int(result.cold)
             self.n_fault_recovered += int(recovered)
             self.queue_s_total += queue_s
-            self._samples.append((
+            self._samples.add((
                 queue_s, result.boot_s, result.exec_s,
                 queue_s + result.latency_s, result.cold,
             ))
+            # mean-service EMA feeds the steal-breakeven cost model
+            service_s = result.boot_s + result.exec_s
+            self._service_ema = (
+                service_s if self._service_ema is None
+                else 0.9 * self._service_ema + 0.1 * service_s
+            )
         return result
 
     def _note_shed(self) -> None:
@@ -365,6 +763,7 @@ class Cluster:
         strategy: "object | str" = "snapfaas",
         options: Optional[ColdStartOptions] = None,
         admission: Optional[AdmissionConfig] = None,
+        autoscale: Optional[AutoscaleConfig] = None,
         time_scale: float = 1.0,
         seq: int = 32,
     ) -> "TraceReplayReport":
@@ -378,47 +777,77 @@ class Cluster:
         ``queue_s`` carries the measured admission + single-flight wait),
         is shed at a full queue, or fails; the report conserves
         ``submitted == completed + shed + failed`` and summarises the
-        p50/p95/p99 end-to-end latency with its queueing split.  The same
-        trace replayed under different ``policy_factory`` clusters is the
-        keep-alive policy comparison (Fig. 7 under real arrivals).
+        p50/p95/p99 end-to-end latency with its queueing split, plus the
+        run's scheduler telemetry (placement policy, steals, scale events,
+        per-worker queue-depth peaks).  ``autoscale`` runs a
+        :class:`~repro.serving.scheduler.Autoscaler` for the duration of
+        the replay, growing and shrinking the active fleet between the
+        configured bounds as sustained lane depth crosses the hysteresis
+        thresholds.  The same trace replayed under different
+        ``policy_factory`` clusters is the keep-alive policy comparison
+        (Fig. 7 under real arrivals).
         """
         vocab = self.workers[0].models[specs[0].family].cfg.vocab_size
         timed = trace.requests(specs, vocab, strategy=strategy,
                                options=options, seq=seq)
-        ctrl = AdmissionController(self, admission)
+        ctrl = AdmissionController(self, admission or self._admission_cfg)
+        scaler: Optional[Autoscaler] = None
+        with self._topology:
+            n_events_before = len(self.scale_events)
+        if autoscale is not None:
+            scaler = Autoscaler(self, ctrl, autoscale)
+            scaler.start()
         futures: List["Future[InvocationResult]"] = []
         t_start = self._clock()
-        for t_arrival, req in timed:
-            if time_scale > 0:
-                delay = t_arrival * time_scale - (self._clock() - t_start)
-                if delay > 0:
-                    time.sleep(delay)
-            futures.append(ctrl.submit(req))
-        results: List[Optional[InvocationResult]] = [None] * len(futures)
-        shed = [False] * len(futures)
-        errors: List[Tuple[int, BaseException]] = []
-        for i, fut in enumerate(futures):
-            try:
-                results[i] = fut.result()
-            except ShedError:
-                shed[i] = True
-            except Exception as e:  # noqa: BLE001 - reported, not swallowed
-                errors.append((i, e))
-        wall_s = self._clock() - t_start
-        ctrl.shutdown()
+        try:
+            for t_arrival, req in timed:
+                if time_scale > 0:
+                    delay = t_arrival * time_scale - (self._clock() - t_start)
+                    if delay > 0:
+                        time.sleep(delay)
+                futures.append(ctrl.submit(req))
+            results: List[Optional[InvocationResult]] = [None] * len(futures)
+            shed = [False] * len(futures)
+            errors: List[Tuple[int, BaseException]] = []
+            for i, fut in enumerate(futures):
+                try:
+                    results[i] = fut.result()
+                except ShedError:
+                    shed[i] = True
+                except Exception as e:  # noqa: BLE001 - reported, not swallowed
+                    errors.append((i, e))
+            wall_s = self._clock() - t_start
+        finally:
+            if scaler is not None:
+                scaler.stop()
+            ctrl.shutdown()
+        admission_m = ctrl.metrics()
+        with self._topology:
+            events = [dict(e) for e in self.scale_events[n_events_before:]]
+        scheduler = {
+            "placement": self.placement.name,
+            "steal": self.steal is not None,
+            "steals": admission_m.get("steals", 0),
+            "scale_events": events,
+            "queue_depth_peaks": ctrl.queue_depth_peaks(),
+            "n_workers_final": self.n_active(),
+        }
         return TraceReplayReport(
             trace=trace, results=results, shed=shed, errors=errors,
-            wall_s=wall_s, admission=ctrl.metrics(),
+            wall_s=wall_s, admission=admission_m, scheduler=scheduler,
         )
 
     # -- fleet metrics ---------------------------------------------------------
 
     def serving_stats(self) -> Dict:
         """Percentile view of the request path: end-to-end latency and its
-        queueing-delay / boot / execution split, over the most recent
-        sample window (completed requests; sheds are counted separately)."""
+        queueing-delay / boot / execution split, over a uniform reservoir
+        of the whole run (completed requests; sheds are counted
+        separately).  ``n_seen`` is the total stream length the
+        ``n_samples``-sized window represents."""
         with self._results_lock:
-            samples = list(self._samples)
+            samples = self._samples.snapshot()
+            n_seen = self._samples.n_seen
             n_shed = self.n_shed
             failures = {
                 str(FailureKind.SHED): self.n_shed,
@@ -431,6 +860,7 @@ class Cluster:
         cold = [s for s in samples if s[4]]
         out = {
             "n_samples": len(samples),
+            "n_seen": n_seen,
             "n_shed": n_shed,
             "failures": failures,
             "dead_workers": dead_workers,
@@ -515,10 +945,24 @@ class Cluster:
             if getattr(w, "faults", None) is not None:
                 chaos = w.faults.counters_snapshot()
                 break
+        with self._topology:
+            retired = sorted(self._retired)
+            scale_events = [dict(e) for e in self.scale_events]
+        with self._results_lock:
+            n_steals = self.n_steals
+        scheduler = {
+            "placement": self.placement.name,
+            "steal": dataclasses.asdict(self.steal) if self.steal else None,
+            "steals": n_steals,
+            "n_workers_active": len(self.workers) - len(retired),
+            "retired_workers": retired,
+            "scale_events": scale_events,
+        }
         out = {
             "n_workers": len(self.workers),
             "n_requests": n_req,
             "n_cold": n_cold,
+            "scheduler": scheduler,
             "serving": self.serving_stats(),
             "cold_fraction": round(n_cold / n_req, 4) if n_req else 0.0,
             "mean_queue_ms": round(queue_total / n_req * 1e3, 3) if n_req else 0.0,
@@ -567,6 +1011,9 @@ class TraceReplayReport:
     errors: List[Tuple[int, BaseException]]
     wall_s: float
     admission: Dict
+    # scheduler telemetry for the run: placement policy name, steal count,
+    # autoscale events and per-worker queue-depth peaks
+    scheduler: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def n_submitted(self) -> int:
@@ -638,4 +1085,10 @@ class TraceReplayReport:
             "exec_ms": percentiles([r.exec_s for r in done]),
             "cold_boot_ms": percentiles([r.boot_s for r in cold]),
             "max_queue_depth": self.admission.get("max_queue_depth", 0),
+            "placement": self.scheduler.get("placement", "static"),
+            "steal": self.scheduler.get("steal", False),
+            "steals": self.scheduler.get("steals", 0),
+            "scale_events": self.scheduler.get("scale_events", []),
+            "queue_depth_peaks": self.scheduler.get("queue_depth_peaks", {}),
+            "n_workers_final": self.scheduler.get("n_workers_final"),
         }

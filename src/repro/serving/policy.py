@@ -226,6 +226,15 @@ class InstancePool:
     def __len__(self) -> int:
         return len(self._pool)
 
+    def contains(self, fn: str) -> bool:
+        """Non-counting residency probe: is ``fn`` warm right now?  Unlike
+        :meth:`get`, this neither bumps the hit/miss counters nor touches
+        policy recency — the scheduler's placement and steal gates ask
+        constantly, and those probes must not distort keep-alive stats or
+        eviction order."""
+        with self._lock:
+            return fn in self._pool and not self.policy.expired(fn)
+
     def get(self, fn: str):
         with self._lock:
             item = self._pool.get(fn)

@@ -70,6 +70,7 @@ class FunctionSpec:
     source_path: str = ""
     resolver: Optional[SourceResolver] = None  # default: NpzSourceResolver
     delta: Optional[Dict[str, np.ndarray]] = None  # shared-base upload
+    exec_sleep_s: float = 0.0  # emulated handler I/O wait (load benches)
 
 
 #: deprecated alias — results are InvocationResult now (same field names
@@ -109,11 +110,18 @@ class Worker:
 
     # -- bootstrap (cluster-manager replication step) -------------------------
 
-    def register_runtime(self, family: str, model: Model, base_params: PyTree) -> None:
+    def register_runtime(self, family: str, model: Model, base_params: PyTree,
+                         fwd=None) -> None:
+        """``fwd`` shares a jitted step across workers: a cluster broadcast
+        passes one jit object fleet-wide so each (shape, family) compiles
+        once per process, not once per worker — scale-up and steal targets
+        would otherwise stall their first request behind a recompile."""
         self.models[family] = model
         flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
         self.registry.register_runtime(family, flat)
-        fwd = jax.jit(lambda p, tokens: model.logits(p, Batch(tokens=tokens)))
+        if fwd is None:
+            fwd = jax.jit(
+                lambda p, tokens: model.logits(p, Batch(tokens=tokens)))
         self._fwd[family] = fwd
         # device-ready view of the base pool: shared (CoW-clean) leaves are
         # served zero-copy to every instance of the family — the runtime
@@ -384,6 +392,12 @@ class Worker:
         params = self._params_for(spec, inst, req_rows)
         logits = self._fwd[spec.family](params, jnp.asarray(request.tokens))
         logits.block_until_ready()
+        if spec.exec_sleep_s > 0.0:
+            # emulated handler I/O wait (FaaS handlers are mostly I/O
+            # bound): a GIL-releasing sleep, so concurrent slots overlap
+            # like real downstream calls would — the load benches use it
+            # to keep service time parallelizable on small hosts
+            time.sleep(spec.exec_sleep_s)
         exec_s = time.perf_counter() - te
         if inst.metrics is not None:
             inst.metrics.t_exec = exec_s

@@ -1,0 +1,458 @@
+"""Scheduler tests: placement policies (determinism, affinity
+co-location, load avoidance), the work-stealing gates against the
+single-flight protocol, queue-driven autoscaling hysteresis, the
+executor width derived from admission caps, and the serving-sample
+reservoir."""
+
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    AdmissionConfig,
+    AffinityPlacement,
+    AutoscaleConfig,
+    Autoscaler,
+    InvocationRequest,
+    PLACEMENTS,
+    StaticHashPlacement,
+    StealConfig,
+    WorkerView,
+    make_placement,
+)
+from repro.serving.cluster import Cluster, _Reservoir, _shard_of
+
+
+def _view(wid, *, depth=0, n_fns=0, cost=0.0, warm=False, registered=False,
+          siblings=0):
+    return WorkerView(worker_id=wid, queue_depth=depth, n_functions=n_fns,
+                      assigned_cost_s=cost, warm=warm, registered=registered,
+                      siblings=siblings)
+
+
+# ------------------------------------------------------- placement (pure)
+
+class TestPlacementPolicies:
+    def test_registry_and_coercion(self):
+        assert set(PLACEMENTS) == {"static", "affinity"}
+        assert isinstance(make_placement("static"), StaticHashPlacement)
+        assert isinstance(make_placement("affinity"), AffinityPlacement)
+        assert isinstance(make_placement(None), StaticHashPlacement)
+        custom = AffinityPlacement(load_weight=2.0)
+        assert make_placement(custom) is custom
+        with pytest.raises(ValueError):
+            make_placement("round-robin")
+
+    def test_static_matches_stable_shard(self):
+        views = [_view(i) for i in range(4)]
+        pol = StaticHashPlacement()
+        for fn in ("lorem", "matmul", "ocr"):
+            assert pol.place(fn, views) == _shard_of(fn, 4)
+
+    def test_affinity_is_deterministic(self):
+        views = [_view(0, depth=2), _view(1, warm=True), _view(2, n_fns=1)]
+        pol = AffinityPlacement()
+        first = pol.place("fn", views)
+        assert all(pol.place("fn", views) == first for _ in range(10))
+
+    def test_affinity_prefers_sibling_colocation(self):
+        # the sibling pull (chunk-sharing affinity) outweighs a small
+        # load difference: dedup siblings should share a warm base
+        views = [_view(0, n_fns=0), _view(1, n_fns=2, siblings=2)]
+        assert AffinityPlacement().place("fn", views) == 1
+
+    def test_affinity_sibling_pull_is_capped(self):
+        # a huge family cannot absorb every worker: past sibling_cap the
+        # load terms win again
+        pol = AffinityPlacement(sibling_cap=2)
+        crowded = _view(1, n_fns=12, siblings=12)
+        empty = _view(0)
+        assert pol.place("fn", [empty, crowded]) == 0
+
+    def test_affinity_avoids_deep_queues(self):
+        views = [_view(0, depth=5), _view(1, depth=0)]
+        assert AffinityPlacement().place("fn", views) == 1
+
+    def test_affinity_prefers_warm_and_breaks_ties_low(self):
+        warm = [_view(0), _view(1, warm=True)]
+        assert AffinityPlacement().place("fn", warm) == 1
+        tied = [_view(0), _view(1), _view(2)]
+        assert AffinityPlacement().place("fn", tied) == 0
+
+    def test_affinity_counts_assigned_cost(self):
+        # one expensive fine-tune weighs more than two cheap adapters
+        views = [_view(0, n_fns=1, cost=3.0), _view(1, n_fns=2, cost=0.1)]
+        assert AffinityPlacement().place("fn", views) == 1
+
+
+class TestStealConfigValidation:
+    def test_defaults_are_consistent(self):
+        cfg = StealConfig()
+        assert cfg.min_cold_depth >= cfg.min_depth
+
+    def test_rejects_bad_bounds(self):
+        with pytest.raises(ValueError):
+            StealConfig(min_depth=0)
+        with pytest.raises(ValueError):
+            StealConfig(max_cold_s=-1.0)
+        with pytest.raises(ValueError):
+            StealConfig(min_depth=3, min_cold_depth=2)
+
+
+# -------------------------------------------------------------- reservoir
+
+class TestReservoir:
+    def test_uniform_over_stream_not_newest_tail(self):
+        # regression: the old deque(maxlen=cap) kept only the newest cap
+        # samples, so percentiles described the drained tail of a replay
+        r = _Reservoir(64)
+        for i in range(10_000):
+            r.add(i)
+        assert r.n_seen == 10_000 and len(r) == 64
+        sample = r.snapshot()
+        assert min(sample) < 2_000          # deque would start at 9_936
+        assert 3_000 < np.mean(sample) < 7_000
+
+    def test_keeps_everything_under_cap(self):
+        r = _Reservoir(16)
+        for i in range(10):
+            r.add(i)
+        assert sorted(r.snapshot()) == list(range(10))
+
+    def test_seeded_and_deterministic(self):
+        a, b = _Reservoir(8, seed=1), _Reservoir(8, seed=1)
+        for i in range(1000):
+            a.add(i)
+            b.add(i)
+        assert a.snapshot() == b.snapshot()
+
+
+# ------------------------------------------------- autoscaler (unit, fakes)
+
+class _FakeController:
+    def __init__(self):
+        self.depth = 0
+        self.lanes = []
+        self.closed = []
+
+    def max_open_depth(self):
+        return self.depth
+
+    def add_lane(self, worker):
+        self.lanes.append(worker.worker_id)
+
+    def shallowest_open_lane(self):
+        return self.closed[-1] + 1 if self.closed else 1
+
+    def close_lane(self, wid):
+        self.closed.append(wid)
+        return True
+
+
+class _FakeCluster:
+    def __init__(self):
+        self.n = 1
+        self._clock = time.perf_counter
+        self.ups = []
+        self.downs = []
+
+    def n_active(self):
+        return self.n
+
+    def scale_up(self, *, t_s, lane_depth):
+        self.n += 1
+        self.ups.append(lane_depth)
+        return SimpleNamespace(worker_id=self.n - 1)
+
+    def retire_worker(self, wid, *, t_s, lane_depth):
+        self.n -= 1
+        self.downs.append(wid)
+
+
+class TestAutoscalerHysteresis:
+    def test_scales_up_on_sustained_depth_and_down_when_quiet(self):
+        cluster, ctrl = _FakeCluster(), _FakeController()
+        cfg = AutoscaleConfig(min_workers=1, max_workers=3, high_depth=4,
+                              low_depth=1, interval_s=0.02, up_after=2,
+                              down_after=3)
+        scaler = Autoscaler(cluster, ctrl, cfg)
+        ctrl.depth = 5
+        scaler.start()
+        try:
+            deadline = time.perf_counter() + 2.0
+            while cluster.n < 3 and time.perf_counter() < deadline:
+                time.sleep(0.01)
+            assert cluster.n == 3           # grew, and capped at max_workers
+            time.sleep(0.1)
+            assert cluster.n == 3           # never exceeds the bound
+            assert ctrl.lanes == [1, 2]     # each new worker got a lane
+            ctrl.depth = 0
+            deadline = time.perf_counter() + 2.0
+            while cluster.n > 1 and time.perf_counter() < deadline:
+                time.sleep(0.01)
+            assert cluster.n == 1           # shrank, and floored at min
+            time.sleep(0.1)
+            assert cluster.n == 1
+            assert len(ctrl.closed) == 2
+        finally:
+            scaler.stop()
+
+    def test_blip_below_hysteresis_does_not_scale(self):
+        cluster, ctrl = _FakeCluster(), _FakeController()
+        cfg = AutoscaleConfig(min_workers=1, max_workers=3, high_depth=4,
+                              low_depth=1, interval_s=0.02, up_after=50,
+                              down_after=50)
+        scaler = Autoscaler(cluster, ctrl, cfg)
+        ctrl.depth = 10
+        scaler.start()
+        try:
+            time.sleep(0.15)                # far fewer than 50 intervals
+            assert cluster.n == 1 and not cluster.ups
+        finally:
+            scaler.stop()
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            AutoscaleConfig(min_workers=0)
+        with pytest.raises(ValueError):
+            AutoscaleConfig(min_workers=3, max_workers=2)
+        with pytest.raises(ValueError):
+            AutoscaleConfig(low_depth=9, high_depth=8)
+        with pytest.raises(ValueError):
+            AutoscaleConfig(interval_s=0.0)
+
+
+# ------------------------------------------- executor sizing (no models)
+
+class TestExecutorSizing:
+    def test_width_derives_from_admission_caps(self, tmp_path):
+        c = Cluster(str(tmp_path / "a"), n_workers=4,
+                    admission=AdmissionConfig(queue_depth=2,
+                                              worker_concurrency=3))
+        try:
+            assert c._executor._max_workers == 4 * (3 + 2)
+        finally:
+            c.shutdown()
+
+    def test_width_floor_and_explicit_cap(self, tmp_path):
+        small = Cluster(str(tmp_path / "b"), n_workers=1)
+        try:
+            assert small._executor._max_workers == 8   # floor
+        finally:
+            small.shutdown()
+        capped = Cluster(str(tmp_path / "c"), n_workers=4,
+                         max_concurrency=5)
+        try:
+            assert capped._executor._max_workers == 5  # user cap wins
+        finally:
+            capped.shutdown()
+
+    def test_resizes_with_the_fleet(self, tmp_path):
+        adm = AdmissionConfig(queue_depth=2, worker_concurrency=3)
+        c = Cluster(str(tmp_path / "d"), n_workers=2, admission=adm)
+        try:
+            assert c._executor._max_workers == max(8, 2 * 5)
+            assert c.scale_up() is not None
+            assert c._executor._max_workers == 3 * 5
+            assert c.retire_worker(c.workers[-1].worker_id)
+            assert c._executor._max_workers == max(8, 2 * 5)
+        finally:
+            c.shutdown()
+
+
+# --------------------------------------------- cluster-level (real models)
+
+@pytest.fixture(scope="module")
+def sched_env(tmp_path_factory):
+    from repro.configs import get_config, reduced
+    from repro.core.snapshot import flatten_pytree
+    from repro.models import build_model
+    from repro.serving.trace import build_cluster
+    import jax
+
+    root = str(tmp_path_factory.mktemp("sched"))
+    cfg = reduced(get_config("gemma-2b"))
+    model = build_model(cfg)
+    cluster, specs = build_cluster(
+        root, cfg, model, n_workers=3, n_functions=4,
+        placement="affinity", steal=StealConfig(min_depth=1,
+                                                min_cold_depth=3),
+    )
+    base_flat = flatten_pytree(
+        jax.tree.map(np.asarray, model.init(0)))
+    yield SimpleNamespace(root=root, cfg=cfg, model=model, cluster=cluster,
+                          specs=specs, base_flat=base_flat)
+    cluster.shutdown()
+
+
+def _req(spec, cfg, seed=0):
+    from repro.serving.trace import request_tokens
+    toks = request_tokens(spec, np.random.default_rng(seed), cfg.vocab_size)
+    return InvocationRequest(function=spec.name, tokens=toks)
+
+
+class TestClusterPlacement:
+    def test_affinity_spreads_by_load(self, sched_env):
+        cluster = sched_env.cluster
+        homes = {s.name: cluster.worker_for(s.name).worker_id
+                 for s in sched_env.specs}
+        # 4 functions over 3 workers: nobody gets more than 2, nobody 0
+        counts = {w.worker_id: 0 for w in cluster.workers}
+        for wid in homes.values():
+            counts[wid] += 1
+        assert max(counts.values()) <= 2 and min(counts.values()) >= 1
+
+    def test_identical_registration_is_deterministic(self, sched_env, tmp_path):
+        from repro.serving.trace import build_cluster
+        maps = []
+        for tag in ("x", "y"):
+            c, specs = build_cluster(
+                str(tmp_path / tag), sched_env.cfg, sched_env.model,
+                n_workers=3, n_functions=4, placement="affinity",
+            )
+            try:
+                maps.append({s.name: c.worker_for(s.name).worker_id
+                             for s in specs})
+            finally:
+                c.shutdown()
+        assert maps[0] == maps[1]
+
+    def test_delta_siblings_colocate(self, sched_env):
+        from repro.serving.worker import FunctionSpec
+        cluster, cfg = sched_env.cluster, sched_env.cfg
+        sibs = []
+        for i in range(2):
+            table = np.array(sched_env.base_flat["embed/table"])
+            table[i] += 0.01
+            spec = FunctionSpec(name=f"sib{i}", family=cfg.name,
+                                delta={"embed/table": table})
+            cluster.register_function(spec)
+            sibs.append(spec)
+        try:
+            homes = {cluster.worker_for(s.name).worker_id for s in sibs}
+            assert len(homes) == 1          # chunk-sharing affinity won
+        finally:
+            for s in sibs:
+                cluster.deregister_function(s.name)
+
+    def test_home_is_sticky_across_invokes(self, sched_env):
+        cluster, spec = sched_env.cluster, sched_env.specs[0]
+        home = cluster.worker_for(spec.name).worker_id
+        for seed in range(3):
+            r = cluster.invoke(_req(spec, sched_env.cfg, seed=seed))
+            assert r.worker_id == home
+
+    def test_replacement_after_crash_and_failover(self, sched_env):
+        cluster, spec = sched_env.cluster, sched_env.specs[1]
+        old_home = cluster.worker_for(spec.name).worker_id
+        # simulate a detected crash: the home leaves the candidate set
+        with cluster._results_lock:
+            cluster._dead.add(old_home)
+        try:
+            new_home = cluster.worker_for(spec.name).worker_id
+            assert new_home != old_home
+            # sticky again on the survivor, and requests complete there
+            assert cluster.worker_for(spec.name).worker_id == new_home
+            r = cluster.invoke(_req(spec, sched_env.cfg))
+            assert r.worker_id == new_home
+        finally:
+            with cluster._results_lock:
+                cluster._dead.discard(old_home)
+
+    def test_runtime_shares_one_jitted_forward(self, sched_env):
+        cluster, cfg = sched_env.cluster, sched_env.cfg
+        fwds = {id(w._fwd[cfg.name]) for w in cluster.workers}
+        assert len(fwds) == 1               # one compile fleet-wide
+        new = cluster.scale_up()
+        assert new is not None
+        try:
+            assert id(new._fwd[cfg.name]) in fwds
+        finally:
+            cluster.retire_worker(new.worker_id)
+
+
+class TestStealGates:
+    def test_warm_thief_steals_even_during_cold_flight(self, sched_env):
+        cluster, spec = sched_env.cluster, sched_env.specs[0]
+        cluster.invoke(_req(spec, sched_env.cfg))       # warm at home
+        home = cluster.worker_for(spec.name).worker_id
+        assert cluster.steal_ok(home, spec.name, 1)     # warm: any depth
+        lock = cluster._acquire_flight(spec.name)
+        try:
+            # stolen warm requests ride the lock-free warm path, so an
+            # in-flight cold start elsewhere must not block them
+            assert cluster.steal_ok(home, spec.name, 5)
+        finally:
+            lock.release()
+
+    def test_cold_thief_needs_depth_and_free_flight(self, sched_env):
+        cluster, spec = sched_env.cluster, sched_env.specs[0]
+        cluster.invoke(_req(spec, sched_env.cfg))
+        home = cluster.worker_for(spec.name).worker_id
+        thief = next(w.worker_id for w in cluster.workers
+                     if w.worker_id != home)
+        # make the breakeven unambiguous: long queues, cheap re-cold
+        with cluster._results_lock:
+            cluster._service_ema = 2.0
+        with cluster._topology:
+            cluster._fn_cost[spec.name] = 0.01
+        cfg = cluster.steal
+        assert not cluster.steal_ok(thief, spec.name,
+                                    cfg.min_cold_depth - 1)
+        assert cluster.steal_ok(thief, spec.name, cfg.min_cold_depth)
+        lock = cluster._acquire_flight(spec.name)
+        try:
+            # a cold steal would serialise behind the in-flight boot
+            assert not cluster.steal_ok(thief, spec.name,
+                                        cfg.min_cold_depth)
+        finally:
+            lock.release()
+
+    def test_no_steal_when_disabled_or_shallow(self, sched_env):
+        cluster, spec = sched_env.cluster, sched_env.specs[0]
+        home = cluster.worker_for(spec.name).worker_id
+        assert not cluster.steal_ok(home, spec.name, 0)  # below min_depth
+        saved, cluster.steal = cluster.steal, None
+        try:
+            assert not cluster.steal_ok(home, spec.name, 99)
+        finally:
+            cluster.steal = saved
+
+
+class TestWarmFastPath:
+    def test_warm_target_requires_residency(self, sched_env):
+        cluster, spec = sched_env.cluster, sched_env.specs[2]
+        req = _req(spec, sched_env.cfg)
+        home = cluster.worker_for(spec.name)
+        home.pool.drop(spec.name)
+        assert cluster._warm_target(req, None) is None   # cold: locked path
+        cluster.invoke(req)
+        assert cluster._warm_target(req, None) is home   # warm: lock-free
+        home.pool.drop(spec.name)
+        assert cluster._warm_target(req, None) is None
+
+    def test_warm_invokes_do_not_hold_the_flight_lock(self, sched_env):
+        # a held single-flight lock must not serialise warm requests —
+        # the cold-scoped single-flight property the stealing relies on
+        cluster, spec = sched_env.cluster, sched_env.specs[2]
+        cluster.invoke(_req(spec, sched_env.cfg))        # ensure warm
+        lock = cluster._acquire_flight(spec.name)
+        done = threading.Event()
+        out = {}
+
+        def _warm_invoke():
+            out["r"] = cluster.invoke(_req(spec, sched_env.cfg, seed=7))
+            done.set()
+
+        t = threading.Thread(target=_warm_invoke)
+        try:
+            t.start()
+            assert done.wait(timeout=30.0), \
+                "warm request blocked behind the flight lock"
+            assert not out["r"].cold
+        finally:
+            lock.release()
+            t.join(timeout=10.0)
