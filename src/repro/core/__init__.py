@@ -52,6 +52,7 @@ from .planner import (
     lower_bound,
     plan_restore,
     predict,
+    predict_demand_paged,
 )
 from .tiers import (
     PackTier,
@@ -90,11 +91,18 @@ from .snapshot import (
     take_snapshot,
     unflatten_paths,
 )
-from .workingset import AccessLog, WorkingSet, build_working_set
+from .workingset import (
+    AccessLog,
+    ChunkRecording,
+    WorkingSet,
+    build_recording,
+    build_working_set,
+    working_set_from_recording,
+)
 
 __all__ = [
     "AccessLog", "ArrayMeta", "ArrayPatch", "BasePool", "CHAOS_PROFILES",
-    "ChunkIntegrityError", "ChunkRef",
+    "ChunkIntegrityError", "ChunkRecording", "ChunkRef",
     "ChunkStore", "CircuitBreaker", "ColdStartMetrics", "ColdStartPrediction",
     "DEFAULT_CHUNK_BYTES", "DeadlineExceededError", "DigestCollisionError",
     "FaultError", "FaultInjector", "FaultMatrix", "FaultyTier",
@@ -110,10 +118,12 @@ __all__ = [
     "TPU_LOCAL_SSD",
     "TPU_OBJECT_STORE", "TPU_TIERED", "TierModel", "TierReadStats",
     "TierSpec", "TieredChunkStore", "TieredStorageModel", "WorkingSet",
-    "build_restore_plan",
+    "build_recording", "build_restore_plan",
     "build_working_set", "calibrate_container", "execute_restore_plan",
-    "flatten_pytree", "lower_bound", "plan_restore", "predict", "resolve",
+    "flatten_pytree", "lower_bound", "plan_restore", "predict",
+    "predict_demand_paged", "resolve",
     "restore_layered", "restore_reap", "restore_regular", "restore_seuss",
     "take_diff_snapshot", "take_snapshot", "unflatten_paths",
+    "working_set_from_recording",
     "ZygoteRegistry",
 ]

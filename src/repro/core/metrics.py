@@ -69,6 +69,15 @@ class ColdStartMetrics:
     # another tier or a shared base after a failed or corrupt read
     read_retries: int = 0
     repaired_chunks: int = 0
+    # demand-paged restore (REAP-style record-and-prefetch): the recorded
+    # set is prefetched in the background while execution starts; chunks the
+    # recording *missed* fault in on first access, and recorded chunks the
+    # execution never touched were prefetched for nothing
+    demand_paged: bool = False
+    prefetch_bytes: int = 0
+    demand_faults: int = 0
+    demand_fault_bytes: int = 0
+    false_prefetch_bytes: int = 0
 
     @property
     def boot_latency(self) -> float:
@@ -116,6 +125,12 @@ class ColdStartMetrics:
         if self.read_retries or self.repaired_chunks:
             r["read_retries"] = self.read_retries
             r["repaired_chunks"] = self.repaired_chunks
+        if self.demand_paged:
+            r["demand_paged"] = True
+            r["prefetch_bytes"] = self.prefetch_bytes
+            r["demand_faults"] = self.demand_faults
+            r["demand_fault_bytes"] = self.demand_fault_bytes
+            r["false_prefetch_bytes"] = self.false_prefetch_bytes
         return r
 
 

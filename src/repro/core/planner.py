@@ -263,6 +263,14 @@ class SnapshotSizes:
     # residency split to price from.  Byte counts above are digest-unique:
     # the scatter-read engine reads each digest once.
     shared_hit_fracs: Dict[str, float] = None  # type: ignore[assignment]
+    # measured recording (REAP record mode): digest-unique bytes/chunks of
+    # the recorded working set over the full snapshot — the prefetch volume
+    # of a demand-paged restore.  ``has_recording`` gates Strategy.AUTO's
+    # demand-paged choice: without a measured recording the synthetic WS is
+    # not trustworthy enough to bet the B term on.
+    recorded_bytes: int = 0
+    recorded_chunks: int = 0
+    has_recording: bool = False
 
     def split(self, key: str) -> Optional[Dict[str, int]]:
         if not self.tier_splits:
@@ -319,6 +327,46 @@ def predict(strategy: str, s: SnapshotSizes, hw: StorageModel) -> ColdStartPredi
             + hw.demand_time(s.exec_demand_miss_bytes, s.exec_demand_miss_chunks),
         )
     raise ValueError(strategy)
+
+
+def predict_demand_paged(
+    strategy: str, s: SnapshotSizes, hw: StorageModel
+) -> ColdStartPrediction:
+    """Eq. 1 for the record-and-prefetch variant of a snapshot strategy.
+
+    Demand paging removes the B term from the boot path entirely: the
+    recorded set streams in the background while execution starts, so the
+    request pays only the part of the stream that outlasts A + C, plus a
+    per-chunk fault-service charge (every first access crosses the
+    MaterializedArray fault path even on a RAM hit), plus the usual CoW and
+    recorded-set-miss charges.  Everything lands in D — overlapped
+    background work is execution-time slowdown, not boot latency:
+
+        T_cold = A + C + max(0, stream − (A + C)) + faults + CoW + misses
+    """
+    if strategy not in ("reap", "snapfaas", "snapfaas-"):
+        raise ValueError(
+            f"demand paging applies to snapshot strategies, not {strategy!r}")
+    if strategy == "reap":
+        key, nbytes = "ws_full", (s.ws_full_bytes or s.full_bytes)
+        cow = 0.0
+    elif strategy == "snapfaas":
+        key, nbytes = "ws", s.ws_bytes
+        cow = hw.cow_time(s.cow_bytes, s.cow_faults)
+    else:  # snapfaas-: background-eager over the whole diff
+        key, nbytes = "diff", s.diff_bytes
+        cow = hw.cow_time(s.cow_bytes, s.cow_faults)
+    stream = hw.eager_time(nbytes, split=s.split(key),
+                           shared_hit=s.shared_hit(key))
+    nchunks = s.recorded_chunks or s.ws_chunks
+    fault_service = nchunks * hw.lat_mem + nbytes / hw.bw_mem
+    miss = hw.demand_time(s.exec_demand_miss_bytes, s.exec_demand_miss_chunks)
+    A = hw.preconfig
+    C = s.residual_init
+    D = max(0.0, stream - (A + C)) + fault_service + cow + miss
+    return ColdStartPrediction(
+        strategy=strategy + "+demand", A=A, B=0.0, C=C, D=D,
+    )
 
 
 def lower_bound(s: SnapshotSizes, hw: StorageModel) -> float:

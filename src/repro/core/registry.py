@@ -43,7 +43,14 @@ from .snapshot import (
     take_diff_snapshot,
     take_snapshot,
 )
-from .workingset import AccessLog, WorkingSet, build_working_set
+from .workingset import (
+    AccessLog,
+    ChunkRecording,
+    WorkingSet,
+    build_recording,
+    build_working_set,
+    working_set_from_recording,
+)
 
 Path = str
 
@@ -62,6 +69,10 @@ class FunctionRecord:
     full: SnapshotManifest              # REAP baseline needs a full snapshot
     ws: Optional[WorkingSet] = None     # over the diff (SnapFaaS)
     ws_full: Optional[WorkingSet] = None  # over the full snapshot (REAP)
+    # measured working set: chunks recorded from real profiled invocations
+    # (REAP record mode); persisted per function, survives reopen, merged
+    # across profiles.  When present it overrides declared access logs.
+    recording: Optional[ChunkRecording] = None
     source_path: str = ""               # original checkpoint (SEUSS/regular)
     init_compute_s: float = 0.0         # measured function-init compute
     plans: Dict[str, RestorePlan] = field(default_factory=dict)  # per strategy
@@ -237,6 +248,10 @@ class ZygoteRegistry:
         rec = FunctionRecord(
             name=name, runtime=family, diff=diff, full=full, source_path=source_path,
         )
+        # a persisted recording from an earlier profiled run survives
+        # registry reopen / re-registration; a truncated or corrupt file
+        # loads as None (fall back to declared/eager behavior, never error)
+        rec.recording = ChunkRecording.load(self.root, name)
         self.functions[name] = rec
         return rec
 
@@ -265,6 +280,7 @@ class ZygoteRegistry:
                 p = os.path.join(self.root, "ws", f"{ws.snapshot_id}.json")
                 if os.path.exists(p):
                     os.unlink(p)
+        ChunkRecording.delete(self.root, name)
         self.store.save_index()
         if compact:
             self.store.compact()
@@ -298,6 +314,10 @@ class ZygoteRegistry:
     def generate_working_set(self, name: str, log: AccessLog) -> None:
         """Mock invocation already happened under ``log``; cut WS files.
 
+        A *measured* recording (from :meth:`record_access`, possibly loaded
+        from disk at registration) takes precedence over the declared log:
+        re-registration must not clobber what profiled executions observed.
+
         The WS swap and plan-cache clear happen under the record's
         ``plan_lock``: a plan build racing this method either finishes
         first (and is cleared here) or starts after (and reads the new
@@ -305,10 +325,20 @@ class ZygoteRegistry:
         after the clear, where nothing would ever invalidate it."""
         rec = self.functions[name]
         base = self.bases[rec.runtime]
-        ws = build_working_set(rec.diff.snapshot_id, resolve(base, rec.diff), log)
-        ws_full = build_working_set(
-            rec.full.snapshot_id, resolve(None, rec.full), log
-        )
+        if rec.recording is not None:
+            ws = working_set_from_recording(
+                rec.diff.snapshot_id, resolve(base, rec.diff), rec.recording
+            )
+            ws_full = working_set_from_recording(
+                rec.full.snapshot_id, resolve(None, rec.full), rec.recording
+            )
+        else:
+            ws = build_working_set(
+                rec.diff.snapshot_id, resolve(base, rec.diff), log
+            )
+            ws_full = build_working_set(
+                rec.full.snapshot_id, resolve(None, rec.full), log
+            )
         with rec.plan_lock:
             rec.ws = ws
             rec.ws_full = ws_full
@@ -316,6 +346,35 @@ class ZygoteRegistry:
             rec.category_refs = None
         ws.save(self.root)
         ws_full.save(self.root)
+
+    def record_access(self, name: str, log: AccessLog) -> ChunkRecording:
+        """Fold one profiled invocation's access log into the function's
+        recording (REAP's record phase), re-cut the working sets from the
+        merged recording, and persist everything crash-safely.
+
+        Recordings are merged across the N profiled requests: the recorded
+        set only ever grows, so a chunk any profile touched is prefetched
+        for all future demand-paged restores."""
+        rec = self.functions[name]
+        base = self.bases[rec.runtime]
+        new = build_recording(name, resolve(None, rec.full), log)
+        merged = rec.recording.merged(new) if rec.recording is not None else new
+        ws = working_set_from_recording(
+            rec.diff.snapshot_id, resolve(base, rec.diff), merged
+        )
+        ws_full = working_set_from_recording(
+            rec.full.snapshot_id, resolve(None, rec.full), merged
+        )
+        with rec.plan_lock:
+            rec.recording = merged
+            rec.ws = ws
+            rec.ws_full = ws_full
+            rec.plans.clear()
+            rec.category_refs = None
+        merged.save(self.root)      # atomic write-and-rename (crash-safe)
+        ws.save(self.root)
+        ws_full.save(self.root)
+        return merged
 
     # -- tier movement --------------------------------------------------------
 
@@ -431,7 +490,9 @@ class ZygoteRegistry:
         plan.tier_split = split
         plan.residency_epoch = epoch
 
-    def restore_plan(self, name: str, strategy: str) -> RestorePlan:
+    def restore_plan(
+        self, name: str, strategy: str, *, demand_paged: bool = False
+    ) -> RestorePlan:
         """The cached RestorePlan for (function, strategy); built on first
         use, with its tier placement refreshed when residency moved.
 
@@ -444,15 +505,23 @@ class ZygoteRegistry:
         cold starts of one function see exactly one plan, and a tier-split
         refresh can never interleave with another and pin a stale split
         under a fresh epoch.
+
+        ``demand_paged`` selects the record-and-prefetch variant: the same
+        chunk classification, but the eager set becomes a background
+        prefetch and everything materializes lazily (cached separately).
         """
         rec = self.functions[name]
         with rec.plan_lock:
-            return self._restore_plan_locked(rec, name, strategy)
+            return self._restore_plan_locked(
+                rec, name, strategy, demand_paged=demand_paged
+            )
 
     def _restore_plan_locked(
-        self, rec: FunctionRecord, name: str, strategy: str
+        self, rec: FunctionRecord, name: str, strategy: str,
+        *, demand_paged: bool = False,
     ) -> RestorePlan:
-        plan = rec.plans.get(strategy)
+        key = strategy + ("+demand" if demand_paged else "")
+        plan = rec.plans.get(key)
         if plan is not None:
             self._refresh_tier_split(plan)
             return plan
@@ -463,21 +532,23 @@ class ZygoteRegistry:
             plan = build_restore_plan(
                 base, rec.diff, working_set=rec.ws,
                 strategy="snapfaas", function=name, store=self.store,
+                demand_paged=demand_paged,
             )
         elif strategy == "snapfaas-":
             plan = build_restore_plan(
                 base, rec.diff, working_set=None,
                 strategy="snapfaas-", function=name, store=self.store,
+                demand_paged=demand_paged,
             )
         elif strategy == "reap":
             plan = build_restore_plan(
                 None, rec.full, working_set=rec.ws_full,
                 strategy="reap", function=name, use_pool=False,
-                store=self.store,
+                store=self.store, demand_paged=demand_paged,
             )
         else:
             raise ValueError(f"no restore plan for strategy {strategy!r}")
-        rec.plans[strategy] = plan
+        rec.plans[key] = plan
         return plan
 
     def cold_start(
@@ -490,6 +561,7 @@ class ZygoteRegistry:
         base_loader: Optional[Callable[[], Dict[Path, np.ndarray]]] = None,
         engine: Optional[str] = None,
         promote: Optional[bool] = None,
+        demand_paged: bool = False,
     ) -> RestoredInstance:
         """Cold-start ``name`` with ``strategy``.
 
@@ -501,6 +573,12 @@ class ZygoteRegistry:
 
         ``promote`` is the tier hint: whether remote-fetched eager chunks
         are promoted into the warm tiers (None → store default).
+
+        ``demand_paged`` requests record-and-prefetch restore: background
+        prefetch of the recorded set plus lazy verified fault-in.  Honored
+        only for the planned snapshot strategies; everything else (legacy
+        engine, seuss/regular) silently restores eagerly — demand paging is
+        an optimisation, never a correctness dependency.
         """
         rec = self.functions[name]
         base = self.bases[rec.runtime]
@@ -509,7 +587,7 @@ class ZygoteRegistry:
         if engine not in ("planned", "legacy"):
             raise ValueError(f"unknown restore engine {engine!r}")
         if engine == "planned" and strategy in PLANNED_STRATEGIES:
-            plan = self.restore_plan(name, strategy)
+            plan = self.restore_plan(name, strategy, demand_paged=demand_paged)
             return execute_restore_plan(
                 plan, self.store, pool if strategy != "reap" else None,
                 residual_init=residual_init, promote=promote,
@@ -590,6 +668,22 @@ class ZygoteRegistry:
         tier_splits = {
             key: self.store.residency(refs) for key, refs in cats.items()
         }
+        # measured recording (if any): digest-unique bytes of the recorded
+        # set over the full snapshot — what a demand-paged restore prefetches
+        recorded_bytes = recorded_chunks = 0
+        if rec.recording is not None:
+            full_resolved = resolve(None, rec.full)
+            seen_rec = set()
+            for path, idx in rec.recording.chunks:
+                ra = full_resolved.get(path)
+                if ra is None or idx >= len(ra.sources):
+                    continue
+                ref = ra.sources[idx][1]
+                if ref.zero or ref.digest in seen_rec:
+                    continue
+                seen_rec.add(ref.digest)
+                recorded_bytes += ref.size
+                recorded_chunks += 1
         return SnapshotSizes(
             full_bytes=unique["full"],
             diff_bytes=diff_bytes,
@@ -605,6 +699,9 @@ class ZygoteRegistry:
             residual_init=residual_init_s,
             tier_splits=tier_splits,
             shared_hit_fracs=shared_hit_fracs,
+            recorded_bytes=recorded_bytes,
+            recorded_chunks=recorded_chunks,
+            has_recording=rec.recording is not None,
         )
 
 

@@ -35,7 +35,7 @@ import numpy as np
 from .chunkstore import ChunkRef, ChunkStore
 from .metrics import ColdStartMetrics, timer
 from .snapshot import ArrayMeta, ResolvedArray, SnapshotManifest, resolve
-from .workingset import WorkingSet
+from .workingset import AccessLog, WorkingSet
 
 Path = str
 
@@ -129,7 +129,7 @@ class MaterializedArray:
     """
 
     __slots__ = ("path", "meta", "state", "_arr", "_buf", "_pending", "_store",
-                 "_pool", "written", "patch", "_dev")
+                 "_pool", "written", "patch", "_dev", "access_log", "_recorded")
 
     def __init__(self, path: Path, meta: ArrayMeta):
         self.path = path
@@ -151,6 +151,11 @@ class MaterializedArray:
         # patched device array
         self.patch: Optional["ArrayPatch"] = None
         self._dev: Optional[Any] = None
+        # recording mode: every read/ensure_rows is mirrored into this log
+        self.access_log: Optional[AccessLog] = None
+        # demand-paged restore: store-chunk indices the recording predicted;
+        # a store materialization *outside* this set is a demand fault
+        self._recorded: Optional[Set[int]] = None
 
     # -- constructors ------------------------------------------------------
     @staticmethod
@@ -168,12 +173,14 @@ class MaterializedArray:
         pending: List[Tuple[int, Optional[ChunkRef], str]],
         store: ChunkStore,
         pool: Optional["BasePool"] = None,
+        recorded: Optional[Set[int]] = None,
     ) -> "MaterializedArray":
         ma = MaterializedArray(path, meta)
         ma._buf = buf
         ma._pending = pending
         ma._store = store
         ma._pool = pool
+        ma._recorded = recorded
         return ma
 
     def _materialize_chunk(self, idx: int, ref: Optional[ChunkRef], src: str) -> int:
@@ -202,6 +209,12 @@ class MaterializedArray:
 
     def read(self, metrics: Optional[ColdStartMetrics] = None) -> np.ndarray:
         """Materialize (demand-paging any pending chunks) and return."""
+        if self.access_log is not None:
+            self.access_log.touch(self.path)
+        return self._read(metrics)
+
+    def _read(self, metrics: Optional[ColdStartMetrics] = None) -> np.ndarray:
+        """`read` minus access logging (internal fast path)."""
         if self.state == _SHARED:
             assert self._arr is not None
             return self._arr
@@ -209,16 +222,23 @@ class MaterializedArray:
             t0 = time.perf_counter()
             nbytes = 0
             n_store = 0
+            faults = 0
+            fault_bytes = 0
             for idx, ref, src in self._pending:
                 nb = self._materialize_chunk(idx, ref, src)
                 if src == "store":
                     nbytes += nb
                     n_store += 1
+                    if self._recorded is not None and idx not in self._recorded:
+                        faults += 1
+                        fault_bytes += nb
             self._pending = []
             if metrics is not None:
                 metrics.t_demand += time.perf_counter() - t0
                 metrics.demand_chunks += n_store
                 metrics.demand_bytes += nbytes
+                metrics.demand_faults += faults
+                metrics.demand_fault_bytes += fault_bytes
         if self._arr is None:
             assert self._buf is not None
             self._arr = self._buf.view(np.dtype(self.meta.dtype)).reshape(self.meta.shape)
@@ -235,8 +255,10 @@ class MaterializedArray:
         synchronous disk reads charged to execution time (term D). Rows never
         requested keep base-snapshot content in the buffer; by construction
         (the serving layer ensures every gathered row) they are never read."""
+        if self.access_log is not None:
+            self.access_log.touch_rows(self.path, rows)
         if self.state == _SHARED or not self._pending:
-            return self.read(metrics)
+            return self._read(metrics)
         from .workingset import rows_to_chunks
 
         need = rows_to_chunks(self.meta, rows)
@@ -244,12 +266,17 @@ class MaterializedArray:
         still: List[Tuple[int, Optional[ChunkRef], str]] = []
         nbytes = 0
         hit = 0
+        faults = 0
+        fault_bytes = 0
         for idx, ref, src in self._pending:
             if idx in need:
                 nb = self._materialize_chunk(idx, ref, src)
                 if src == "store":
                     nbytes += nb
                     hit += 1
+                    if self._recorded is not None and idx not in self._recorded:
+                        faults += 1
+                        fault_bytes += nb
             else:
                 still.append((idx, ref, src))
         self._pending = still
@@ -257,13 +284,28 @@ class MaterializedArray:
             metrics.t_demand += time.perf_counter() - t0
             metrics.demand_chunks += hit
             metrics.demand_bytes += nbytes
+            metrics.demand_faults += faults
+            metrics.demand_fault_bytes += fault_bytes
         if self._arr is None:
             self._arr = self._buf.view(np.dtype(self.meta.dtype)).reshape(self.meta.shape)
         return self._arr
 
+    def unread_recorded_bytes(self) -> int:
+        """Bytes of recorded (prefetched) store chunks still pending — i.e.
+        prefetched but never touched by the execution (false prefetch)."""
+        if self._recorded is None:
+            return 0
+        total = 0
+        for idx, ref, src in self._pending:
+            if src == "store" and ref is not None and idx in self._recorded:
+                total += ref.size
+        return total
+
     def write(self, metrics: Optional[ColdStartMetrics] = None) -> np.ndarray:
         """Return a writable buffer; a first write to a SHARED array is a
         copy-on-write fault (term D)."""
+        if self.access_log is not None:
+            self.access_log.touch(self.path)
         if self.state == _SHARED:
             t0 = time.perf_counter()
             assert self._arr is not None
@@ -293,6 +335,21 @@ class RestoredInstance:
     arrays: Dict[Path, MaterializedArray]
     device_state: Dict[str, Any]
     metrics: ColdStartMetrics
+    # background prefetch of the recorded set (demand-paged restore only);
+    # purely advisory — chunks it has not reached yet fault in verified
+    prefetch_thread: Optional[Any] = None
+
+    def attach_access_log(self, log: Optional[AccessLog]) -> None:
+        """Mirror every subsequent read into ``log`` (None detaches)."""
+        for ma in self.arrays.values():
+            ma.access_log = log
+
+    def finalize_demand_paging(self) -> None:
+        """After execution: recorded chunks still pending were prefetched for
+        nothing — account them as false-prefetch bytes."""
+        if self.metrics.demand_paged:
+            self.metrics.false_prefetch_bytes = sum(
+                ma.unread_recorded_bytes() for ma in self.arrays.values())
 
     def value(self, path: Path) -> np.ndarray:
         return self.arrays[path].read(self.metrics)

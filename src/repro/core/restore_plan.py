@@ -57,6 +57,9 @@ class PlanArray:
     patch_rows: int = 0                                # rows in the buffer
     patch_row_of: Optional[Dict[int, int]] = None
     patch_eager: Tuple[Tuple[int, ChunkRef], ...] = () # (row offset, ref)
+    # demand-paged plans: store-pending chunk indices the recording covers
+    # (prefetched in the background; materialized on first access)
+    recorded: Optional[frozenset] = None
 
 
 @dataclass
@@ -81,8 +84,16 @@ class RestorePlan:
     # the registry rebuilds the plan when promotion/demotion moved chunks
     tier_split: Dict[str, int] = field(default_factory=dict)
     residency_epoch: int = -1
+    # demand-paged restore (REAP record-and-prefetch): nothing is streamed
+    # eagerly; the recorded set is prefetched in the background and every
+    # chunk materializes lazily on first access
+    demand_paged: bool = False
+    prefetch_refs: Tuple[ChunkRef, ...] = ()
+    prefetch_bytes: int = 0
 
     def eager_refs(self) -> List[ChunkRef]:
+        if self.demand_paged:
+            return list(self.prefetch_refs)
         return [
             ref
             for pa in self.arrays
@@ -99,12 +110,18 @@ def build_restore_plan(
     function: str = "",
     use_pool: bool = True,
     store: Optional[ChunkStore] = None,
+    demand_paged: bool = False,
 ) -> RestorePlan:
     """Resolve layering and classify every chunk — once, off the hot path.
 
     ``use_pool`` is True for the layered strategies (base chunks memcpy from
     the in-RAM pool) and False for REAP (no sharing: base chunks read from
     storage like everything else).
+
+    ``demand_paged`` flips the B phase from streaming to prefetching: no
+    chunk is read eagerly; every store chunk stays pending (lazily faulted
+    on first access, verified), and the subset ``working_set`` covers — the
+    *recorded* set — is prefetched toward RAM in the background instead.
     """
     resolved = resolve(base, diff)
     device_state: Dict[str, Any] = dict(base.device_state) if base else {}
@@ -112,6 +129,8 @@ def build_restore_plan(
 
     arrays: List[PlanArray] = []
     eager_bytes = eager_chunks = shared_bytes = 0
+    prefetch_refs: List[ChunkRef] = []
+    prefetch_bytes = 0
     for path, ra in resolved.items():
         meta = ra.meta
         dirty = ra.dirty_indices()
@@ -126,6 +145,7 @@ def build_restore_plan(
         base_meta = base.arrays.get(path) if base is not None else None
         patchable = (
             use_pool
+            and not demand_paged
             and bool(dirty)
             and base_meta is not None
             and base_meta.shape == meta.shape
@@ -138,6 +158,7 @@ def build_restore_plan(
         pending: List[PendingEntry] = []
         eager: List[Tuple[int, ChunkRef]] = []
         patch_eager: List[Tuple[int, ChunkRef]] = []
+        recorded: Set[int] = set()
         row_of: Dict[int, int] = {}
         sel = (
             np.full(len(ra.sources), -1, dtype=np.int32) if patchable else None
@@ -152,6 +173,12 @@ def build_restore_plan(
                     continue
                 if use_pool:
                     pending.append((idx, None, "pool"))
+                elif demand_paged:
+                    pending.append((idx, ref, "store"))
+                    if in_ws(idx):
+                        recorded.add(idx)
+                        prefetch_refs.append(ref)
+                        prefetch_bytes += ref.size
                 elif in_ws(idx):
                     eager.append((lo, ref))
                 else:
@@ -174,7 +201,13 @@ def build_restore_plan(
                 continue
             if ref.zero:
                 continue
-            if in_ws(idx):
+            if demand_paged:
+                pending.append((idx, ref, "store"))
+                if in_ws(idx):
+                    recorded.add(idx)
+                    prefetch_refs.append(ref)
+                    prefetch_bytes += ref.size
+            elif in_ws(idx):
                 eager.append((lo, ref))
             else:
                 pending.append((idx, ref, "store"))
@@ -189,6 +222,7 @@ def build_restore_plan(
             patch_rows=n_rows,
             patch_row_of=row_of if patchable else None,
             patch_eager=tuple(patch_eager),
+            recorded=frozenset(recorded) if demand_paged else None,
         ))
 
     plan = RestorePlan(
@@ -198,6 +232,9 @@ def build_restore_plan(
         arrays=arrays, device_state=device_state,
         eager_bytes=eager_bytes, eager_chunks=eager_chunks,
         shared_bytes=shared_bytes,
+        demand_paged=demand_paged,
+        prefetch_refs=tuple(prefetch_refs),
+        prefetch_bytes=prefetch_bytes,
     )
     uniq: Set[str] = set()
     for r in plan.eager_refs():
@@ -252,7 +289,8 @@ def execute_restore_plan(
             continue
         buf = np.zeros(pa.meta.nbytes, dtype=np.uint8)
         ma = MaterializedArray.private(
-            pa.path, pa.meta, buf, list(pa.pending), store, pool
+            pa.path, pa.meta, buf, list(pa.pending), store, pool,
+            recorded=pa.recorded,
         )
         if pa.patch_sel is not None:
             rows = np.zeros(pa.patch_rows * pa.meta.chunk_bytes, dtype=np.uint8)
@@ -270,6 +308,41 @@ def execute_restore_plan(
         arrays[pa.path] = ma
     m.shared_bytes_mapped = plan.shared_bytes
     m.t_preconfig = t.lap()
+
+    # B (demand-paged): stream nothing — kick off a background prefetch of
+    # the recorded set through the tiered store's pipelined stages and let
+    # execution start immediately.  The prefetch is purely advisory: chunks
+    # it has not reached yet (and chunks the recording missed) fault in
+    # synchronously through the verified ``get_chunk`` path, so a failed or
+    # slow prefetch can delay but never corrupt.
+    if plan.demand_paged:
+        m.demand_paged = True
+        m.prefetch_bytes = plan.prefetch_bytes
+        inst = RestoredInstance(
+            function=plan.function, strategy=plan.strategy, arrays=arrays,
+            device_state=dict(plan.device_state), metrics=m,
+        )
+        if plan.prefetch_refs and hasattr(store, "prefetch"):
+            import threading
+
+            refs = list(plan.prefetch_refs)
+
+            def _bg() -> None:
+                try:
+                    store.prefetch(refs)
+                except Exception:
+                    pass  # best-effort: misses fault in verified
+
+            th = threading.Thread(
+                target=_bg, name=f"ws-prefetch-{plan.function}", daemon=True
+            )
+            th.start()
+            inst.prefetch_thread = th
+        m.t_eager = t.lap()
+        if residual_init is not None:
+            inst.device_state = residual_init(inst.device_state)
+        m.t_init = t.lap()
+        return inst
 
     # B: one batched parallel scatter-read, straight into the buffers.
     # Tiered stores pipeline remote fetch / local preadv / RAM memcpy and

@@ -29,6 +29,18 @@ Path = str
 ChunkKey = Tuple[Path, int]
 
 
+def _atomic_json_dump(path: str, obj: object) -> None:
+    """Write ``obj`` as JSON with the same crash-safe discipline as the
+    chunk-store index: write a sibling tmp file, flush + fsync, then
+    atomically rename over the destination."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 @dataclass
 class AccessLog:
     """Records which parts of which arrays an execution touched."""
@@ -91,9 +103,8 @@ class WorkingSet:
     def save(self, root: str) -> str:
         os.makedirs(os.path.join(root, "ws"), exist_ok=True)
         p = os.path.join(root, "ws", f"{self.snapshot_id}.json")
-        with open(p, "w") as f:
-            json.dump({"snapshot_id": self.snapshot_id,
-                       "chunks": sorted([list(c) for c in self.chunks])}, f)
+        _atomic_json_dump(p, {"snapshot_id": self.snapshot_id,
+                              "chunks": sorted([list(c) for c in self.chunks])})
         return p
 
     @staticmethod
@@ -105,6 +116,109 @@ class WorkingSet:
             snapshot_id=o["snapshot_id"],
             chunks=frozenset((c[0], int(c[1])) for c in o["chunks"]),
         )
+
+
+@dataclass
+class ChunkRecording:
+    """A measured working set: the chunks (in *array* coordinates, i.e. over
+    the full-snapshot layout) that profiled executions of a function actually
+    touched.
+
+    Unlike :class:`WorkingSet` (which is a projection onto one snapshot's
+    dirty chunks) a recording is snapshot-independent — it survives
+    re-registration against a new diff and is merged across the N profiled
+    requests REAP-style.  It is persisted per function under
+    ``root/ws/recording-<function>.json`` with the same atomic fsync'd
+    write-and-rename discipline as ``index.json``.
+    """
+
+    function: str
+    chunks: FrozenSet[ChunkKey]
+    version: int = 1
+    n_profiles: int = 1
+
+    def __contains__(self, key: ChunkKey) -> bool:
+        return key in self.chunks
+
+    def merged(self, other: "ChunkRecording") -> "ChunkRecording":
+        """Union of two recordings (REAP merges the record of every profiled
+        request); bumps the version so cached plans re-price."""
+        return ChunkRecording(
+            function=self.function,
+            chunks=self.chunks | other.chunks,
+            version=max(self.version, other.version) + 1,
+            n_profiles=self.n_profiles + other.n_profiles,
+        )
+
+    def rows_for(self, path: Path, meta: ArrayMeta) -> Set[int]:
+        """Chunk indices recorded for one array."""
+        return {i for (p, i) in self.chunks if p == path}
+
+    @staticmethod
+    def _path_for(root: str, function: str) -> str:
+        return os.path.join(root, "ws", f"recording-{function}.json")
+
+    def save(self, root: str) -> str:
+        os.makedirs(os.path.join(root, "ws"), exist_ok=True)
+        p = self._path_for(root, self.function)
+        _atomic_json_dump(p, {
+            "function": self.function,
+            "version": int(self.version),
+            "n_profiles": int(self.n_profiles),
+            "chunks": sorted([list(c) for c in self.chunks]),
+        })
+        return p
+
+    @staticmethod
+    def load(root: str, function: str) -> Optional["ChunkRecording"]:
+        """Load a persisted recording; a missing, truncated, or corrupt file
+        yields ``None`` (the caller falls back to eager restore) rather than
+        an error — recordings are an optimisation, never a correctness
+        dependency."""
+        p = ChunkRecording._path_for(root, function)
+        try:
+            with open(p) as f:
+                o = json.load(f)
+            return ChunkRecording(
+                function=str(o["function"]),
+                chunks=frozenset((str(c[0]), int(c[1])) for c in o["chunks"]),
+                version=int(o["version"]),
+                n_profiles=int(o["n_profiles"]),
+            )
+        except (OSError, ValueError, KeyError, TypeError, IndexError):
+            return None
+
+    @staticmethod
+    def delete(root: str, function: str) -> None:
+        try:
+            os.unlink(ChunkRecording._path_for(root, function))
+        except OSError:
+            pass
+
+
+def build_recording(
+    function: str,
+    resolved: Dict[Path, ResolvedArray],
+    log: AccessLog,
+) -> ChunkRecording:
+    """Convert an access log into a recording over *all* chunks of the
+    full-snapshot layout (not just dirty ones).
+
+    Unlike :func:`build_working_set`, row-level and full-array observations
+    for the same path are *unioned*: a profiled run that gathered rows of an
+    embedding and later streamed the whole table must record both.
+    """
+    keys: Set[ChunkKey] = set()
+    for path, ra in resolved.items():
+        nchunks = len(ra.sources)
+        touched: Set[int] = set()
+        if path in log.touched_full:
+            touched.update(range(nchunks))
+        if path in log.touched_rows:
+            touched.update(i for i in rows_to_chunks(ra.meta, log.touched_rows[path])
+                           if i < nchunks)
+        keys.update((path, i) for i in touched)
+    return ChunkRecording(function=function, chunks=frozenset(keys))
 
 
 def build_working_set(
@@ -123,4 +237,25 @@ def build_working_set(
             keys.update((path, i) for i in touched & dirty)
         elif path in log.touched_full:
             keys.update((path, i) for i in dirty)
+    return WorkingSet(snapshot_id=snapshot_id, chunks=frozenset(keys))
+
+
+def working_set_from_recording(
+    snapshot_id: str,
+    resolved: Dict[Path, ResolvedArray],
+    recording: ChunkRecording,
+) -> WorkingSet:
+    """Project a measured recording onto one snapshot's dirty chunks.
+
+    Stale entries (paths or chunk indices that no longer exist in the
+    snapshot) are silently dropped — a recording taken against an older
+    registration must degrade to a smaller WS, never to an error.
+    """
+    keys: Set[ChunkKey] = set()
+    for path, idx in recording.chunks:
+        ra = resolved.get(path)
+        if ra is None or idx >= len(ra.sources):
+            continue
+        if ra.sources[idx][0] == "diff":
+            keys.add((path, idx))
     return WorkingSet(snapshot_id=snapshot_id, chunks=frozenset(keys))

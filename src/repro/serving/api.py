@@ -128,6 +128,14 @@ class ColdStartOptions:
     (``None`` → the store's configured default).  ``promote`` covers the
     eager B phase only; execution-time demand faults always follow the
     store's ``promote_on_fetch`` default.
+
+    ``record`` runs this invocation in REAP's record mode: every array
+    read is mirrored into an access log and folded into the function's
+    persisted recording afterwards (merged across profiled requests).
+    ``demand_paging`` selects the record-and-prefetch restore: ``True``
+    forces it, ``False`` forces eager, and ``None`` (default) lets
+    :attr:`Strategy.AUTO` choose it when the measured working set prices
+    cheaper under Eq. 1 — fixed strategies stay eager unless forced.
     """
 
     strategy: Strategy = Strategy.SNAPFAAS
@@ -140,6 +148,8 @@ class ColdStartOptions:
     #: prefetch serves every sibling function referencing those chunks.
     prefetch_category: str = "ws"
     promote: Optional[bool] = None      # remote fetches promote downward
+    record: bool = False                # profile this run into the recording
+    demand_paging: Optional[bool] = None  # True/False force; None → AUTO picks
 
     def with_strategy(self, strategy: "Strategy | str") -> "ColdStartOptions":
         import dataclasses

@@ -281,6 +281,24 @@ class Cluster:
         warm tiers were dropped, or after a shard reassignment)."""
         return self.worker_for(fn).prefetch_function(fn, category)
 
+    def record_function(
+        self, fn: str, tokens: "np.ndarray", *, n_profiles: int = 1,
+    ) -> InvocationResult:
+        """Profile ``fn`` REAP-style through the normal request path:
+        ``n_profiles`` forced-cold invocations in record mode on the owning
+        worker, each folding its access log into the function's persisted
+        recording (merged, crash-safe).  Subsequent demand-paged restores —
+        and ``Strategy.AUTO``'s Eq. 1 pricing — use the measured working
+        set.  Returns the last profile's result."""
+        out: Optional[InvocationResult] = None
+        for _ in range(max(1, n_profiles)):
+            out = self.invoke(InvocationRequest(
+                function=fn, tokens=np.asarray(tokens),
+                options=ColdStartOptions(record=True, force_cold=True),
+            ))
+        assert out is not None
+        return out
+
     def deregister_function(self, fn: str) -> int:
         """Remove ``fn`` from its home shard and garbage-collect its
         now-unreferenced chunks (shared-base chunks survive — refcounted).

@@ -26,13 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AccessLog, ColdStartMetrics, RestoredInstance, ZygoteRegistry
-from repro.core.planner import PAPER_C220G5, StorageModel
+from repro.core.planner import PAPER_C220G5, StorageModel, predict_demand_paged
 from repro.core.tiers import PrefetchStats, TierSpec
 from repro.core.restore import MaterializedArray
 from repro.core.snapshot import flatten_pytree, resolve
 from repro.kernels.snapshot_patch import patch_apply_op
 from repro.models import Batch, Model
 from repro.serving.api import (
+    ColdStartOptions,
     InvocationRequest,
     InvocationResult,
     NpzSourceResolver,
@@ -206,6 +207,22 @@ class Worker:
         sibling sharing those digests (residency is content-addressed)."""
         return self.registry.prefetch_working_set(fn, category)
 
+    def record_function(
+        self, fn: str, tokens: np.ndarray, *, n_profiles: int = 1,
+    ) -> InvocationResult:
+        """Profile ``fn`` REAP-style: run ``n_profiles`` forced-cold
+        invocations in record mode, folding each access log into the
+        function's persisted recording (the measured working set demand-paged
+        restores prefetch).  Returns the last profile's result."""
+        out: Optional[InvocationResult] = None
+        for _ in range(max(1, n_profiles)):
+            out = self.invoke(InvocationRequest(
+                function=fn, tokens=np.asarray(tokens),
+                options=ColdStartOptions(record=True, force_cold=True),
+            ))
+        assert out is not None
+        return out
+
     def deregister_function(self, fn: str) -> int:
         """Remove ``fn`` everywhere on this worker: warm pool, spec, Eq. 1
         cache, snapshots.  Chunk payloads shared with the base or sibling
@@ -246,9 +263,17 @@ class Worker:
         with self._lock:
             entry = self._auto.get(fn)
             if entry is None or entry[0] is not rec.ws or entry[3] != epoch:
-                best, preds = select_strategy(self.registry.sizes(fn),
-                                              self.storage)
-                entry = (rec.ws, best, preds, epoch)
+                sizes = self.registry.sizes(fn)
+                best, preds = select_strategy(sizes, self.storage)
+                # demand-paged variant of the winner: only priced when the
+                # working set is *measured* (a real recording exists) — a
+                # synthetic WS is not trustworthy enough to bet the B term on
+                demand = False
+                if sizes.has_recording and \
+                        best.value in ("reap", "snapfaas", "snapfaas-"):
+                    dp = predict_demand_paged(best.value, sizes, self.storage)
+                    demand = dp.total < preds[best].total
+                entry = (rec.ws, best, preds, epoch, demand)
                 self._auto[fn] = entry
             return entry
 
@@ -261,9 +286,20 @@ class Worker:
             return s
         return self._auto_entry(fn)[1]
 
+    def resolve_demand_paging(self, fn: str, opts: ColdStartOptions) -> bool:
+        """Whether this request's cold start (if any) restores demand-paged.
+        An explicit ``opts.demand_paging`` always wins; otherwise only
+        :attr:`Strategy.AUTO` opts in, and only when the measured working
+        set priced cheaper under Eq. 1 (see :func:`predict_demand_paged`)."""
+        if opts.demand_paging is not None:
+            return opts.demand_paging
+        if Strategy.coerce(opts.strategy) is not Strategy.AUTO:
+            return False
+        return bool(self._auto_entry(fn)[4])
+
     def predicted_cost(self, fn: str, strategy: Strategy) -> float:
         """Predicted re-cold-start latency (s) — the GDSF residency cost."""
-        _, best, preds, _ = self._auto_entry(fn)
+        _, best, preds, _, _ = self._auto_entry(fn)
         pred = preds.get(Strategy.coerce(strategy))
         return pred.total if pred is not None else preds[best].total
 
@@ -313,6 +349,7 @@ class Worker:
     def _params_for(
         self, spec: FunctionSpec, inst: RestoredInstance,
         request_rows: Optional[Dict[str, np.ndarray]] = None,
+        record_log: Optional[AccessLog] = None,
     ) -> PyTree:
         """Materialize exactly what this request touches.
 
@@ -320,7 +357,14 @@ class Worker:
         ``touched_rows``) use row-granular demand materialization: only the
         chunks covering the request's rows fault in; everything else of the
         leaf keeps base content and is never read. Other touched leaves
-        materialize fully. This is the exec-time half of the WS win."""
+        materialize fully. This is the exec-time half of the WS win.
+
+        ``record_log`` is REAP's record mode: leaves served through the
+        device shortcuts (zero-copy pool share, on-device patch) bypass the
+        instrumented host materialization, so their touches are mirrored
+        into the log here — row-granular where the serving contract is
+        row-granular, full otherwise.  Host-path touches are logged by the
+        MaterializedArrays themselves (``attach_access_log``)."""
         template = self.models[spec.family].param_shapes()
         rows = dict(spec.touched_rows)
         for k, v in (request_rows or {}).items():
@@ -334,9 +378,16 @@ class Worker:
             path = prefix[:-1]
             ma = inst.arrays[path]
             if ma.state == "shared" and not ma.written and path in pool_dev:
+                if record_log is not None:
+                    record_log.touch(path)
                 return pool_dev[path]  # zero-copy CoW share
             dev = self._maybe_device_patch(spec.family, path, ma)
             if dev is not None:
+                if record_log is not None:
+                    if path in rows:
+                        record_log.touch_rows(path, rows[path])
+                    else:
+                        record_log.touch(path)
                 return dev  # base ⊕ diff fused on device
             if path in rows:
                 arr = ma.ensure_rows(rows[path], inst.metrics)
@@ -364,6 +415,7 @@ class Worker:
                 f"{self.worker_id} (never registered, or deregistered)"
             )
         strategy = self.resolve_strategy(fn, opts.strategy)
+        demand_paged = self.resolve_demand_paging(fn, opts)
         if opts.prefetch:
             # scheduler-style WS promotion into the warm tiers; deliberately
             # ahead of the timed window (the hint models a prefetch that
@@ -380,16 +432,20 @@ class Worker:
                 residual_init=lambda ds: {**ds, "kv_ready": True},
                 engine=opts.engine,
                 promote=opts.promote,
+                demand_paged=demand_paged,
                 **loaders,
             )
         boot = time.perf_counter() - t0
 
         te = time.perf_counter()
+        record_log = AccessLog() if opts.record else None
+        if record_log is not None:
+            inst.attach_access_log(record_log)
         req_rows = {}
         if "embed/table" in spec.touched_rows or "embed/table" in spec.variant \
                 or (spec.delta is not None and "embed/table" in spec.delta):
             req_rows["embed/table"] = np.unique(np.asarray(request.tokens))
-        params = self._params_for(spec, inst, req_rows)
+        params = self._params_for(spec, inst, req_rows, record_log=record_log)
         logits = self._fwd[spec.family](params, jnp.asarray(request.tokens))
         logits.block_until_ready()
         if spec.exec_sleep_s > 0.0:
@@ -401,6 +457,15 @@ class Worker:
         exec_s = time.perf_counter() - te
         if inst.metrics is not None:
             inst.metrics.t_exec = exec_s
+        if cold and inst.metrics is not None and inst.metrics.demand_paged:
+            # recorded chunks still pending were prefetched for nothing
+            inst.finalize_demand_paging()
+        if record_log is not None:
+            # fold this profile into the persisted recording; the WS swap
+            # invalidates cached plans and this worker's Eq. 1 table, so
+            # the pool re-admission below already prices the measured WS
+            inst.attach_access_log(None)
+            self.registry.record_access(fn, record_log)
 
         # charge host buffers AND cached patched device copies (ma._dev) to
         # the pool budget — a warm patchable instance pins a full-size

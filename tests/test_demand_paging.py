@@ -1,0 +1,495 @@
+"""Recorded working sets + demand-paged restore: the byte-equivalence
+battery.
+
+The contract under test (REAP record-and-prefetch, §4.2): a demand-paged
+cold start — background prefetch of the measured recording plus lazy
+verified fault-in — must be *byte-identical* to the eager restore of the
+same strategy, for any function shape, any recording state (absent, empty,
+partial, complete, stale, corrupt) and any tier placement.  Demand paging
+is an optimisation, never a correctness dependency: every degraded state
+falls back to eager semantics, never to wrong bytes or an error.
+
+Accounting invariant (checked throughout): after ``finalize_demand_paging``,
+
+    prefetch_bytes == (demand_bytes - demand_fault_bytes) + false_prefetch_bytes
+
+— every prefetched byte was either actually read (recorded hit) or is
+charged as false prefetch; every read outside the recording is a fault.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AccessLog,
+    ChunkRecording,
+    SnapshotSizes,
+    StorageModel,
+    TierSpec,
+    ZygoteRegistry,
+    flatten_pytree,
+    predict,
+    predict_demand_paged,
+)
+from repro.core.registry import PLANNED_STRATEGIES
+
+CHUNK = 4096
+
+# fast remote throttle: semantics, not timing
+FAST_REMOTE = dict(remote_bw=10e9, remote_lat=0.0)
+
+ALL_STRATEGIES = ("snapfaas", "snapfaas-", "reap", "seuss", "regular")
+
+
+# ------------------------------------------------------------------ fixtures
+
+def _tree(seed=0, n=3, rows=96, cols=32):
+    rng = np.random.default_rng(seed)
+    return {
+        f"layer{i}": {
+            "w": rng.standard_normal((rows, cols)).astype(np.float32),
+            "b": rng.standard_normal((cols,)).astype(np.float32),
+        }
+        for i in range(n)
+    }
+
+
+def _variant_of(base_tree, seed, dirty_mask):
+    """A function variant: per-layer dirtiness from ``dirty_mask`` bits,
+    plus a zeroed-row stripe and a brand-new (head) array — the shapes that
+    exercise pool/patch/zero/store chunk classes at once."""
+    rng = np.random.default_rng(seed + 1)
+    variant = {
+        k: {kk: np.array(vv) for kk, vv in v.items()}
+        for k, v in base_tree.items()
+    }
+    for i, name in enumerate(sorted(variant)):
+        if dirty_mask & (1 << i):
+            variant[name]["w"] = variant[name]["w"] + 0.5
+    first = sorted(variant)[0]
+    variant[first]["w"][:8] = 0.0  # zeroed rows → zero-ref chunks
+    variant["head"] = {
+        "w": rng.standard_normal((24, 16)).astype(np.float32)
+    }
+    return variant
+
+
+def _registry(tmp, base_tree, variant, *, declared_ws=True):
+    reg = ZygoteRegistry(
+        str(tmp / "reg"), chunk_bytes=CHUNK,
+        tiers=TierSpec(ram_bytes=64 << 20, **FAST_REMOTE),
+    )
+    reg.register_runtime("fam", base_tree)
+    reg.register_function("fn", "fam", variant)
+    if declared_ws:
+        log = AccessLog()
+        for p in flatten_pytree(variant):
+            log.touch(p)
+        reg.generate_working_set("fn", log)
+    return reg
+
+
+def _loaders(variant):
+    flat = flatten_pytree(variant)
+    src = lambda: {p: np.array(a) for p, a in flat.items()}
+    base = lambda: {p: np.array(a) for p, a in flat.items()}
+    return dict(source_loader=src, base_loader=base)
+
+
+def _cold(reg, strategy, variant, *, demand):
+    kw = {}
+    if strategy == "seuss":
+        kw["source_loader"] = _loaders(variant)["source_loader"]
+    elif strategy == "regular":
+        kw.update(_loaders(variant))
+    return reg.cold_start("fn", strategy, demand_paged=demand, **kw)
+
+
+def _assert_conservation(m):
+    assert m.prefetch_bytes == (
+        (m.demand_bytes - m.demand_fault_bytes) + m.false_prefetch_bytes
+    ), (m.prefetch_bytes, m.demand_bytes, m.demand_fault_bytes,
+        m.false_prefetch_bytes)
+
+
+# --------------------------------------------------- the equivalence battery
+
+class TestByteEquivalence:
+    """For random functions, random recording states and random tier
+    placements, demand-paged restore is byte-identical to eager restore on
+    all 5 strategies."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 2 ** 16),
+        n_layers=st.integers(2, 4),
+        dirty_mask=st.integers(0, 15),
+        rec_kind=st.sampled_from(["none", "empty", "partial", "complete"]),
+        demote=st.booleans(),
+        strategy=st.sampled_from(ALL_STRATEGIES),
+    )
+    def test_demand_equals_eager(self, tmp_path_factory, seed, n_layers,
+                                 dirty_mask, rec_kind, demote, strategy):
+        tmp = tmp_path_factory.mktemp("dp")
+        base_tree = _tree(seed, n=n_layers)
+        variant = _variant_of(base_tree, seed, dirty_mask)
+        reg = _registry(tmp, base_tree, variant)
+        flat = flatten_pytree(variant)
+
+        if rec_kind == "empty":
+            reg.record_access("fn", AccessLog())
+        elif rec_kind == "partial":
+            log = AccessLog()
+            paths = sorted(flat)
+            for p in paths[: max(1, len(paths) // 2)]:
+                log.touch(p)
+            log.touch_rows(paths[-1], range(4))  # row-level observation too
+            reg.record_access("fn", log)
+        elif rec_kind == "complete":
+            log = AccessLog()
+            for p in flat:
+                log.touch(p)
+            reg.record_access("fn", log)
+        if demote:
+            reg.demote_function("fn")
+
+        eager = _cold(reg, strategy, variant, demand=False)
+        demand = _cold(reg, strategy, variant, demand=True)
+        et, dt = eager.pytree(), demand.pytree()
+        assert set(et) == set(dt) == set(flat)
+        for p in flat:
+            np.testing.assert_array_equal(dt[p], flat[p], err_msg=p)
+            np.testing.assert_array_equal(et[p], dt[p], err_msg=p)
+        demand.finalize_demand_paging()
+
+        m = demand.metrics
+        if strategy in PLANNED_STRATEGIES:
+            assert m.demand_paged
+            _assert_conservation(m)
+            # "none" leaves the full declared WS in place and "complete"
+            # records every chunk: both cover everything exec can touch
+            if rec_kind in ("none", "complete"):
+                assert m.demand_faults == 0, rec_kind
+        else:
+            # seuss/regular have no snapshot to page: silently eager
+            assert not m.demand_paged
+            assert m.demand_faults == 0
+
+    def test_partial_recording_faults_are_counted(self, tmp_path):
+        """A recording that misses chunks produces demand faults — counted,
+        byte-correct, and conserved."""
+        base_tree = _tree(3)
+        variant = _variant_of(base_tree, 3, dirty_mask=7)
+        reg = _registry(tmp_path, base_tree, variant)
+        log = AccessLog()
+        log.touch("head/w")  # record only the new array
+        reg.record_access("fn", log)
+        inst = _cold(reg, "reap", variant, demand=True)
+        tree = inst.pytree()
+        inst.finalize_demand_paging()
+        for p, a in flatten_pytree(variant).items():
+            np.testing.assert_array_equal(tree[p], a, err_msg=p)
+        m = inst.metrics
+        assert m.demand_faults > 0
+        assert m.demand_fault_bytes > 0
+        _assert_conservation(m)
+
+    def test_complete_recording_zero_faults_all_planned(self, tmp_path):
+        """`demand_faults == 0` when the recording is complete, for every
+        planned strategy, warm or demoted."""
+        base_tree = _tree(5)
+        variant = _variant_of(base_tree, 5, dirty_mask=3)
+        reg = _registry(tmp_path, base_tree, variant)
+        log = AccessLog()
+        for p in flatten_pytree(variant):
+            log.touch(p)
+        reg.record_access("fn", log)
+        for demoted in (False, True):
+            if demoted:
+                reg.demote_function("fn")
+            for strategy in PLANNED_STRATEGIES:
+                inst = _cold(reg, strategy, variant, demand=True)
+                inst.pytree()
+                inst.finalize_demand_paging()
+                assert inst.metrics.demand_faults == 0, (strategy, demoted)
+                assert inst.metrics.false_prefetch_bytes == 0, (strategy, demoted)
+
+
+# ------------------------------------------------------------- plan shape
+
+class TestDemandPlan:
+    def test_demand_plan_streams_nothing_eagerly(self, tmp_path):
+        base_tree = _tree(7)
+        variant = _variant_of(base_tree, 7, dirty_mask=5)
+        reg = _registry(tmp_path, base_tree, variant)
+        plan = reg.restore_plan("fn", "snapfaas", demand_paged=True)
+        assert plan.demand_paged
+        assert plan.eager_bytes == 0 and plan.eager_chunks == 0
+        assert plan.prefetch_bytes == sum(r.size for r in plan.prefetch_refs)
+        assert plan.prefetch_bytes > 0
+        # the demand variant is cached under its own key, next to eager
+        eager_plan = reg.restore_plan("fn", "snapfaas", demand_paged=False)
+        assert eager_plan is not plan
+        assert reg.restore_plan("fn", "snapfaas", demand_paged=True) is plan
+
+    def test_snapfaas_minus_prefetches_whole_diff(self, tmp_path):
+        """snapfaas- has no WS: the whole diff is recorded, so demand faults
+        are structurally impossible."""
+        base_tree = _tree(9)
+        variant = _variant_of(base_tree, 9, dirty_mask=2)
+        reg = _registry(tmp_path, base_tree, variant, declared_ws=False)
+        inst = reg.cold_start("fn", "snapfaas-", demand_paged=True)
+        inst.pytree()
+        inst.finalize_demand_paging()
+        assert inst.metrics.demand_paged
+        assert inst.metrics.demand_faults == 0
+        assert inst.metrics.prefetch_bytes == inst.metrics.demand_bytes
+
+
+# -------------------------------------------------- persistence & corruption
+
+class TestRecordingPersistence:
+    def test_record_access_merges_and_persists(self, tmp_path):
+        base_tree = _tree(11)
+        variant = _variant_of(base_tree, 11, dirty_mask=1)
+        reg = _registry(tmp_path, base_tree, variant)
+        a = AccessLog(); a.touch("head/w")
+        first = reg.record_access("fn", a)
+        b = AccessLog(); b.touch_rows(sorted(flatten_pytree(variant))[0], [0, 1])
+        merged = reg.record_access("fn", b)
+        assert merged.n_profiles == first.n_profiles + 1
+        assert merged.version > first.version
+        assert first.chunks <= merged.chunks
+        loaded = ChunkRecording.load(reg.root, "fn")
+        assert loaded is not None
+        assert loaded.chunks == merged.chunks
+        assert loaded.n_profiles == merged.n_profiles
+
+    def test_atomic_save_leaves_no_tmp(self, tmp_path):
+        base_tree = _tree(13)
+        variant = _variant_of(base_tree, 13, dirty_mask=1)
+        reg = _registry(tmp_path, base_tree, variant)
+        log = AccessLog()
+        for p in flatten_pytree(variant):
+            log.touch(p)
+        reg.record_access("fn", log)
+        reg.record_access("fn", log)  # overwrite path: rename, not rewrite
+        ws_dir = os.path.join(reg.root, "ws")
+        assert not [f for f in os.listdir(ws_dir) if f.endswith(".tmp")]
+        with open(ChunkRecording._path_for(reg.root, "fn")) as f:
+            o = json.load(f)  # the published file is always complete JSON
+        assert o["function"] == "fn" and o["chunks"]
+
+    def test_recording_survives_reopen(self, tmp_path):
+        base_tree = _tree(17)
+        variant = _variant_of(base_tree, 17, dirty_mask=3)
+        reg = _registry(tmp_path, base_tree, variant)
+        log = AccessLog()
+        for p in flatten_pytree(variant):
+            log.touch(p)
+        reg.record_access("fn", log)
+        # a new registry over the same root: re-registration re-adopts the
+        # persisted recording (chunks dedup against the existing store)
+        reg2 = _registry(tmp_path, base_tree, variant)
+        rec = reg2.functions["fn"]
+        assert rec.recording is not None
+        assert rec.recording.chunks == reg.functions["fn"].recording.chunks
+        assert reg2.sizes("fn").has_recording
+        inst = reg2.cold_start("fn", "snapfaas", demand_paged=True)
+        tree = inst.pytree()
+        inst.finalize_demand_paging()
+        assert inst.metrics.demand_faults == 0
+        for p, a in flatten_pytree(variant).items():
+            np.testing.assert_array_equal(tree[p], a, err_msg=p)
+
+    def test_deregister_removes_recording(self, tmp_path):
+        base_tree = _tree(19)
+        variant = _variant_of(base_tree, 19, dirty_mask=1)
+        reg = _registry(tmp_path, base_tree, variant)
+        reg.record_access("fn", AccessLog())
+        p = ChunkRecording._path_for(reg.root, "fn")
+        assert os.path.exists(p)
+        reg.deregister_function("fn")
+        assert not os.path.exists(p)
+
+
+class TestCorruptRecording:
+    """Satellite: a truncated recording file falls back to eager restore
+    instead of erroring the invocation."""
+
+    @pytest.mark.parametrize("corruption", ["truncated", "garbage", "empty",
+                                            "wrong_schema"])
+    def test_corrupt_file_falls_back_to_eager(self, tmp_path, corruption):
+        base_tree = _tree(23)
+        variant = _variant_of(base_tree, 23, dirty_mask=3)
+        reg = _registry(tmp_path, base_tree, variant)
+        log = AccessLog()
+        for p in flatten_pytree(variant):
+            log.touch(p)
+        reg.record_access("fn", log)
+        path = ChunkRecording._path_for(reg.root, "fn")
+        if corruption == "truncated":
+            data = open(path, "rb").read()
+            with open(path, "wb") as f:
+                f.write(data[: len(data) // 2])  # simulated torn write
+        elif corruption == "garbage":
+            with open(path, "wb") as f:
+                f.write(b"\x00\xffnot json at all")
+        elif corruption == "empty":
+            open(path, "wb").close()
+        else:
+            with open(path, "w") as f:
+                json.dump({"function": "fn", "chunks": "not-a-list"}, f)
+
+        assert ChunkRecording.load(reg.root, "fn") is None
+        # registration over the corrupt file succeeds with no recording...
+        reg2 = _registry(tmp_path, base_tree, variant)
+        assert reg2.functions["fn"].recording is None
+        assert not reg2.sizes("fn").has_recording  # AUTO will not pick demand
+        # ...and the invocation restores eagerly and correctly
+        inst = reg2.cold_start("fn", "snapfaas")
+        assert not inst.metrics.demand_paged
+        for p, a in flatten_pytree(variant).items():
+            np.testing.assert_array_equal(inst.value(p), a, err_msg=p)
+
+    def test_stale_recording_is_tolerated(self, tmp_path):
+        """A persisted recording naming paths/chunks that no longer exist
+        (taken against an older registration) degrades to a smaller WS,
+        never to an error or wrong bytes."""
+        base_tree = _tree(29)
+        variant = _variant_of(base_tree, 29, dirty_mask=1)
+        flat = flatten_pytree(variant)
+        valid = [(p, 0) for p in sorted(flat)[:2]]
+        stale = [("ghost/array", 0), (sorted(flat)[0], 10_000)]
+        tmp_root = str(tmp_path / "reg")
+        ChunkRecording(
+            function="fn", chunks=frozenset(valid + stale), n_profiles=2,
+        ).save(tmp_root)
+        reg = _registry(tmp_path, base_tree, variant)
+        rec = reg.functions["fn"]
+        assert rec.recording is not None  # adopted at registration
+        reg.generate_working_set("fn", AccessLog())  # re-cut from recording
+        for strategy in PLANNED_STRATEGIES:
+            inst = _cold(reg, strategy, variant, demand=True)
+            tree = inst.pytree()
+            inst.finalize_demand_paging()
+            _assert_conservation(inst.metrics)
+            for p, a in flat.items():
+                np.testing.assert_array_equal(tree[p], a,
+                                              err_msg=f"{strategy}/{p}")
+
+
+# ------------------------------------------------------------------ pricing
+
+class TestDemandPricing:
+    def _sizes(self):
+        return SnapshotSizes(
+            full_bytes=512 << 20, diff_bytes=64 << 20, ws_bytes=8 << 20,
+            ws_full_bytes=16 << 20, ws_chunks=64,
+            non_ws_diff_bytes=56 << 20, non_ws_diff_chunks=0,
+            shared_bytes=448 << 20,
+            cow_bytes=0, cow_faults=0, init_compute=0.0, residual_init=0.05,
+            recorded_bytes=8 << 20, recorded_chunks=64, has_recording=True,
+        )
+
+    def _slow_hw(self):
+        # the paper's 150 MBps storage-bound point
+        return StorageModel(
+            name="slow", bw_store=150e6, lat_store=5e-3, bw_mem=20e9,
+            lat_mem=1e-7, bw_dma=20e9, preconfig=0.02,
+        )
+
+    def test_demand_removes_B_from_boot(self):
+        s, hw = self._sizes(), self._slow_hw()
+        for strategy in PLANNED_STRATEGIES:
+            pred = predict_demand_paged(strategy, s, hw)
+            assert pred.B == 0.0
+            assert pred.strategy == strategy + "+demand"
+            assert pred.total > 0
+
+    def test_demand_beats_eager_when_storage_bound(self):
+        """At 150 MBps a small measured WS prices cheaper demand-paged: the
+        stream overlaps A+C and fault service is memory-speed."""
+        s, hw = self._sizes(), self._slow_hw()
+        assert predict_demand_paged("snapfaas", s, hw).total \
+            < predict("snapfaas", s, hw).total
+
+    def test_demand_rejects_loader_strategies(self):
+        s, hw = self._sizes(), self._slow_hw()
+        for strategy in ("seuss", "regular", "nope"):
+            with pytest.raises(ValueError):
+                predict_demand_paged(strategy, s, hw)
+
+
+# ----------------------------------------------------- worker record/replay
+
+class TestWorkerRecordReplay:
+    """End-to-end through the serving layer: record mode is observationally
+    identical to a plain invocation, the recording persists, and a forced
+    demand-paged replay reproduces the output with zero faults."""
+
+    def _worker(self, tmp_path):
+        jax = pytest.importorskip("jax")
+        from repro.models import build_model
+        from repro.models.config import ModelConfig
+        from repro.serving.worker import FunctionSpec, Worker
+
+        cfg = ModelConfig(
+            name="t", family="dense", num_layers=2, d_model=64, num_heads=2,
+            num_kv_heads=2, d_ff=128, vocab_size=256, tie_embeddings=True,
+            dtype="float32",
+        )
+        model = build_model(cfg)
+        worker = Worker(str(tmp_path / "w"), chunk_bytes=4096)
+        base_params = model.init(0)
+        worker.register_runtime("t", model, base_params)
+        flat = flatten_pytree(jax.tree.map(np.asarray, base_params))
+        variant = {k: np.array(v) for k, v in flat.items()}
+        for k in variant:
+            if k.endswith("wq"):
+                variant[k] = variant[k] + 0.01
+        spec = FunctionSpec(name="fn", family="t", variant=variant)
+        worker.register_function(spec)
+        return worker, spec, cfg
+
+    def test_record_then_demand_replay(self, tmp_path):
+        from repro.serving import ColdStartOptions, InvocationRequest, Strategy
+        from repro.serving.trace import request_tokens
+
+        worker, spec, cfg = self._worker(tmp_path)
+        toks = request_tokens(spec, np.random.default_rng(0), cfg.vocab_size,
+                              seq=8)
+
+        def cold(**opts):
+            return worker.invoke(InvocationRequest(
+                function="fn", tokens=toks,
+                options=ColdStartOptions(strategy=Strategy.SNAPFAAS,
+                                         force_cold=True, **opts),
+            ))
+
+        baseline = cold()
+        recorded = worker.record_function("fn", toks, n_profiles=2)
+        np.testing.assert_array_equal(
+            np.asarray(baseline.output), np.asarray(recorded.output))
+        rec = worker.registry.functions["fn"].recording
+        assert rec is not None and rec.n_profiles >= 2
+        assert ChunkRecording.load(worker.registry.root, "fn") is not None
+        assert worker.registry.sizes("fn").has_recording
+
+        first = cold(demand_paging=True)
+        second = cold(demand_paging=True)
+        for r in (first, second):
+            assert r.metrics.demand_paged
+            np.testing.assert_array_equal(
+                np.asarray(baseline.output), np.asarray(r.output))
+        # the recording covered this request: the replay faults nothing in
+        assert second.metrics.demand_faults == 0
+        # forcing eager on the same function still works and still matches
+        eager = cold(demand_paging=False)
+        assert not eager.metrics.demand_paged
+        np.testing.assert_array_equal(
+            np.asarray(baseline.output), np.asarray(eager.output))

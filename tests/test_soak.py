@@ -1,6 +1,9 @@
 """Bounded concurrency soak (``-m soak``): N threads hammer register /
-invoke / prefetch / demote / deregister against one cluster, with
-byte-equivalence asserts on every invocation output.
+invoke / prefetch / demote / record / deregister against one cluster, with
+byte-equivalence asserts on every invocation output.  The invoke mix
+includes demand-paged cold starts (forced and AUTO-resolved) racing the
+record ops that rewrite the working sets they prefetch from, and the
+demote ops that move the chunks they lazily fault in.
 
 This is the instrument that shook out the ISSUE 5 race fixes (plan-epoch
 check-then-act, tier lookup-then-read vs demotion, deregister vs in-flight
@@ -61,7 +64,8 @@ def test_concurrency_soak_byte_equivalence_and_conservation(tmp_path):
         reg_locks = {spec.name: threading.Lock() for spec in specs}
         counters = {
             "submitted": 0, "ok": 0, "invoke_clean": 0,
-            "lifecycle_clean": 0, "mismatches": 0, "unexpected": [],
+            "lifecycle_clean": 0, "mismatches": 0, "recorded": 0,
+            "demand_paged": 0, "unexpected": [],
         }
         clock = time.perf_counter
         counters_lock = threading.Lock()
@@ -85,18 +89,22 @@ def test_concurrency_soak_byte_equivalence_and_conservation(tmp_path):
                 spec = specs[int(rng.integers(len(specs)))]
                 dice = rng.random()
                 try:
-                    if dice < 0.70:                       # invoke
+                    if dice < 0.66:                       # invoke
                         s = int(rng.choice(token_seeds))
                         toks = request_tokens(
                             spec, np.random.default_rng(s), cfg.vocab_size)
                         strategy = Strategy.AUTO if rng.random() < 0.25 \
                             else Strategy.SNAPFAAS
+                        # a third of invokes force the demand-paged restore,
+                        # racing concurrent record/demote/deregister ops
+                        demand = bool(rng.random() < 0.33)
                         bump("submitted")
                         fut = cluster.submit(InvocationRequest(
                             function=spec.name, tokens=toks,
                             options=ColdStartOptions(
                                 strategy=strategy,
-                                force_cold=bool(rng.random() < 0.3)),
+                                force_cold=bool(rng.random() < 0.3),
+                                demand_paging=True if demand else None),
                         ))
                         try:
                             r = fut.result(timeout=120)
@@ -104,17 +112,36 @@ def test_concurrency_soak_byte_equivalence_and_conservation(tmp_path):
                             bump("invoke_clean") if is_clean(e) else \
                                 counters["unexpected"].append(e)
                             continue
+                        if r.metrics is not None and r.metrics.demand_paged:
+                            bump("demand_paged")
                         if np.array_equal(np.asarray(r.output),
                                           expected[(spec.name, s)]):
                             bump("ok")
                         else:
                             bump("mismatches")
-                    elif dice < 0.80:                     # prefetch
+                    elif dice < 0.76:                     # prefetch
                         cat = str(rng.choice(["ws", "diff", "ws_full"]))
                         cluster.prefetch_function(spec.name, cat)
-                    elif dice < 0.90:                     # demote
+                    elif dice < 0.86:                     # demote
                         cluster.worker_for(spec.name) \
                                .registry.demote_function(spec.name)
+                    elif dice < 0.93:                     # record (REAP profile)
+                        s = int(rng.choice(token_seeds))
+                        toks = request_tokens(
+                            spec, np.random.default_rng(s), cfg.vocab_size)
+                        bump("submitted")
+                        try:
+                            r = cluster.record_function(spec.name, toks)
+                        except Exception as e:  # noqa: BLE001
+                            bump("invoke_clean") if is_clean(e) else \
+                                counters["unexpected"].append(e)
+                            continue
+                        bump("recorded")
+                        if np.array_equal(np.asarray(r.output),
+                                          expected[(spec.name, s)]):
+                            bump("ok")
+                        else:
+                            bump("mismatches")
                     else:                                 # deregister cycle
                         lock = reg_locks[spec.name]
                         if not lock.acquire(blocking=False):
@@ -144,6 +171,10 @@ def test_concurrency_soak_byte_equivalence_and_conservation(tmp_path):
         assert counters["mismatches"] == 0, counters
         assert not counters["unexpected"], counters["unexpected"][:5]
         assert counters["ok"] > 0
+        # the storm actually exercised the new paths: profiled recordings
+        # were cut and demand-paged cold starts ran against them
+        assert counters["recorded"] > 0, counters
+        assert counters["demand_paged"] > 0, counters
         # every submitted invocation resolved: correct output, a clean
         # lifecycle-race error, or a (zero) mismatch — none lost
         assert counters["submitted"] == \
