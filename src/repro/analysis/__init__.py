@@ -1,0 +1,59 @@
+"""repro-analyze: AST-based invariant checking for the snapshot stack.
+
+The paper's never-wrong-bytes guarantee rests on conventions the code
+can only state in comments — which lock guards which field, that every
+index/recording write is fsync-and-rename, that tier reads raise the
+typed taxonomy, that the seeded replay paths never touch wall-clock or
+global RNG state.  This package turns those conventions into checked
+annotations: four AST passes (guards, lockorder, atomicio, errors)
+walk ``src/repro`` and report violations against a committed baseline.
+
+Run it as ``python -m repro.analysis`` (see ``--help``); CI gates on
+``--fail-on-new``.  docs/analysis.md is the user-facing catalog.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Sequence
+
+from .config import DEFAULT_CONFIG, AnalysisConfig
+from .model import Baseline, Finding
+from .registry import all_passes, get_pass, run_passes
+from .scan import SourceModule, load_module, load_modules
+
+__all__ = [
+    "AnalysisConfig", "Baseline", "Finding", "SourceModule",
+    "DEFAULT_CONFIG", "all_passes", "get_pass", "run_passes",
+    "load_module", "load_modules", "default_root", "default_baseline_path",
+    "analyze",
+]
+
+
+def default_root() -> str:
+    """The ``repro`` package directory this module was loaded from."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def default_baseline_path() -> str:
+    """``analysis-baseline.json`` at the repo root (two levels above the
+    package: <root>/src/repro), falling back to the current directory
+    when the package is installed elsewhere."""
+    root = os.path.dirname(os.path.dirname(default_root()))
+    candidate = os.path.join(root, "analysis-baseline.json")
+    if os.path.isdir(os.path.join(root, "src")):
+        return candidate
+    return os.path.abspath("analysis-baseline.json")
+
+
+def analyze(root: Optional[str] = None,
+            passes: Sequence[str] = (),
+            config: Optional[AnalysisConfig] = None) -> List[Finding]:
+    """Load every module under ``root`` (default: the installed repro
+    package, analysis excluded) and run the selected passes."""
+    root = root or default_root()
+    modules = [
+        m for m in load_modules(root)
+        if not m.rel.startswith("analysis/")
+    ]
+    return run_passes(modules, config or DEFAULT_CONFIG, names=passes)

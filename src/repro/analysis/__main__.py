@@ -1,0 +1,112 @@
+"""CLI for the invariant analyzer.
+
+    python -m repro.analysis                      # text report, exit 0
+    python -m repro.analysis --fail-on-new        # CI gate: exit 1 on any
+                                                  # finding not baselined
+    python -m repro.analysis --format json        # machine-readable
+    python -m repro.analysis --write-baseline     # accept current findings
+    python -m repro.analysis --pass guards --pass lockorder
+    python -m repro.analysis --list-passes
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from . import (all_passes, analyze, default_baseline_path, default_root)
+from .model import Baseline, Finding
+
+
+def _text_report(findings: List[Finding], new: List[Finding],
+                 accepted: List[Finding], stale: List[str],
+                 gating: bool) -> str:
+    lines: List[str] = []
+    for f in findings:
+        tag = "" if f in new or not gating else " [baselined]"
+        lines.append(f.format() + tag)
+    by_sev = {}
+    for f in findings:
+        by_sev[f.severity] = by_sev.get(f.severity, 0) + 1
+    summary = ", ".join(f"{n} {s}" for s, n in sorted(by_sev.items())) or "clean"
+    lines.append(f"repro-analyze: {len(findings)} finding(s) ({summary}); "
+                 f"{len(new)} new, {len(accepted)} baselined, "
+                 f"{len(stale)} stale baseline entr{'y' if len(stale) == 1 else 'ies'}")
+    if stale:
+        lines.append("stale baseline fingerprints (prune with "
+                     "--write-baseline): " + ", ".join(sorted(stale)))
+    return "\n".join(lines)
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST invariant analyzer for the repro snapshot stack",
+    )
+    ap.add_argument("--root", default=None,
+                    help="package root to scan (default: the installed "
+                         "repro package)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON path (default: "
+                         "analysis-baseline.json at the repo root)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit 1 when any finding is not in the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings as the new baseline")
+    ap.add_argument("--baseline-reason", default="accepted during baseline "
+                    "refresh", help="reason recorded with --write-baseline")
+    ap.add_argument("--pass", dest="passes", action="append", default=[],
+                    help="run only this pass (repeatable)")
+    ap.add_argument("--list-passes", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for p in all_passes():
+            print(f"{p.name:10s} {p.description}")
+        return 0
+
+    root = args.root or default_root()
+    baseline_path = args.baseline or default_baseline_path()
+    findings = analyze(root=root, passes=args.passes)
+
+    if args.write_baseline:
+        Baseline.from_findings(findings, reason=args.baseline_reason) \
+            .save(baseline_path)
+        print(f"wrote {len(findings)} finding(s) to {baseline_path}")
+        return 0
+
+    baseline = Baseline.load(baseline_path)
+    new, accepted, stale = baseline.split(findings)
+
+    if args.format == "json":
+        print(json.dumps({
+            "root": root,
+            "findings": [f.to_json() for f in findings],
+            "new": [f.fingerprint for f in new],
+            "baselined": [f.fingerprint for f in accepted],
+            "stale_baseline": sorted(stale),
+            "summary": {
+                "total": len(findings),
+                "new": len(new),
+                "errors": sum(1 for f in findings if f.severity == "error"),
+                "warnings": sum(1 for f in findings
+                                if f.severity == "warning"),
+            },
+        }, indent=1))
+    else:
+        print(_text_report(findings, new, accepted, stale,
+                           gating=args.fail_on_new))
+
+    if args.fail_on_new and new:
+        if args.format != "json":
+            print(f"FAIL: {len(new)} new finding(s) not in baseline "
+                  f"({baseline_path})", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

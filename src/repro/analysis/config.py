@@ -1,0 +1,71 @@
+"""Per-repo policy for the analyzer passes.
+
+The passes themselves are generic AST machinery; everything that encodes
+*this* codebase's conventions — which modules must be deterministic,
+which functions are the blessed fsync-and-rename helpers, where the
+typed-fault taxonomy is mandatory — lives here, so tests can swap in a
+synthetic config and fixture trees.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Tuple
+
+
+@dataclass(frozen=True)
+class AnalysisConfig:
+    # ---- errors pass ----
+    # module prefixes where a broad `except Exception` needs a
+    # `# broad-ok:` reason (the tier/restore/serving paths that must
+    # surface the typed taxonomy from core/faults.py)
+    typed_error_prefixes: Tuple[str, ...] = ("core/", "serving/")
+    # tier-boundary modules where `raise KeyError` needs `# keyerror-ok:`
+    # (callers distinguish "digest genuinely unknown" from tier faults,
+    # so an undocumented KeyError is a swallowed fault)
+    tier_boundary_modules: Tuple[str, ...] = (
+        "core/tiers.py", "core/chunkstore.py", "core/registry.py",
+    )
+
+    # ---- determinism rules ----
+    # modules that must replay bit-identically under a seed: wall-clock
+    # reads need `# wallclock-ok:` and RNGs must be explicitly seeded
+    deterministic_modules: Tuple[str, ...] = (
+        "serving/loadgen.py", "serving/trace.py", "serving/scheduler.py",
+        "serving/cluster.py", "serving/admission.py", "core/faults.py",
+    )
+
+    # ---- atomicio pass ----
+    # module prefixes whose persistent JSON/index writes must go through
+    # an approved fsync-and-rename helper
+    persistence_prefixes: Tuple[str, ...] = ("core/",)
+    # (module, qualified function) pairs implementing the write-tmp /
+    # fsync / os.replace discipline; raw open("w")+json.dump inside them
+    # is the *implementation* of the rule, not a violation
+    atomic_helpers: FrozenSet[Tuple[str, str]] = frozenset({
+        ("core/workingset.py", "_atomic_json_dump"),
+        ("core/chunkstore.py", "ChunkStore.save_index"),
+        ("core/snapshot.py", "SnapshotManifest.save"),
+    })
+
+    # ---- lockorder pass ----
+    # method names too generic to resolve across modules; call-graph
+    # propagation skips them instead of unioning every same-named def
+    ambiguous_call_names: FrozenSet[str] = frozenset({
+        # repo-generic verbs
+        "save", "load", "get", "put", "read", "write", "close", "stats",
+        "merge", "merged", "run", "start", "stop", "submit",
+        # container / file / threading methods that shadow repo defs
+        "clear", "discard", "pop", "popitem", "append", "appendleft",
+        "add", "remove", "update", "extend", "insert", "copy", "sort",
+        "reverse", "flush", "wait", "notify", "notify_all", "acquire",
+        "release", "join", "result", "cancel", "done",
+    })
+    # reentrant lock kinds: a self-edge on these is legal
+    reentrant_kinds: FrozenSet[str] = frozenset({"RLock"})
+
+    # ---- guards pass ----
+    # nothing repo-specific: fields opt in via `# guarded-by:` markers
+
+
+DEFAULT_CONFIG = AnalysisConfig()

@@ -1,0 +1,128 @@
+"""Finding/severity model and the committed-baseline workflow.
+
+A finding is one violation of a stated invariant, located at a
+``file:line`` but *identified* by a line-independent fingerprint
+(pass, rule, file, enclosing scope, detail) so that unrelated edits —
+adding a blank line above a baselined finding — never churn the
+baseline.  The baseline file (``analysis-baseline.json`` at the repo
+root) records fingerprints that are accepted with a written reason;
+``--fail-on-new`` gates on findings whose fingerprint is not in it.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One invariant violation.
+
+    ``scope`` is the enclosing ``Class.method`` (or ``<module>``), and
+    ``detail`` is the stable core of the message (a field/lock name, an
+    exception type, a call name) — together with pass/rule/file they
+    make the fingerprint, which deliberately excludes the line number.
+    """
+
+    pass_name: str
+    rule: str                 # e.g. "G001"
+    severity: str             # error | warning | info
+    file: str                 # path relative to the scanned root
+    line: int
+    scope: str                # Class.method enclosing the violation
+    detail: str               # stable identity core (field, lock, call …)
+    message: str              # human-readable, may mention line context
+
+    def __post_init__(self) -> None:
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}")
+
+    @property
+    def fingerprint(self) -> str:
+        key = "\x1f".join(
+            (self.pass_name, self.rule, self.file, self.scope, self.detail)
+        )
+        return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "pass": self.pass_name,
+            "rule": self.rule,
+            "severity": self.severity,
+            "file": self.file,
+            "line": self.line,
+            "scope": self.scope,
+            "detail": self.detail,
+            "message": self.message,
+            "fingerprint": self.fingerprint,
+        }
+
+    def format(self) -> str:
+        return (f"{self.file}:{self.line}: [{self.rule}/{self.severity}] "
+                f"{self.message}  ({self.scope})")
+
+
+@dataclass
+class Baseline:
+    """Accepted findings: fingerprint -> reason.  Committed to the repo."""
+
+    entries: Dict[str, Dict[str, str]] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.exists(path):
+            return cls()
+        with open(path) as f:
+            raw = json.load(f)
+        entries = {
+            e["fingerprint"]: {k: str(v) for k, v in e.items()}
+            for e in raw.get("findings", [])
+        }
+        return cls(entries=entries)
+
+    def save(self, path: str) -> None:
+        raw = {
+            "version": 1,
+            "findings": [
+                dict(sorted(e.items()))
+                for _, e in sorted(self.entries.items())
+            ],
+        }
+        with open(path, "w") as f:
+            json.dump(raw, f, indent=1, sort_keys=False)
+            f.write("\n")
+
+    def __contains__(self, fingerprint: str) -> bool:
+        return fingerprint in self.entries
+
+    @classmethod
+    def from_findings(cls, findings: Sequence[Finding],
+                      reason: str = "baselined") -> "Baseline":
+        entries = {}
+        for f in findings:
+            entries[f.fingerprint] = {
+                "fingerprint": f.fingerprint,
+                "rule": f.rule,
+                "file": f.file,
+                "scope": f.scope,
+                "detail": f.detail,
+                "reason": reason,
+            }
+        return cls(entries=entries)
+
+    def split(self, findings: Sequence[Finding]
+              ) -> Tuple[List[Finding], List[Finding], List[str]]:
+        """(new, accepted, stale): findings not in the baseline, findings
+        covered by it, and baseline fingerprints that no longer match any
+        finding (candidates for pruning)."""
+        new = [f for f in findings if f.fingerprint not in self.entries]
+        accepted = [f for f in findings if f.fingerprint in self.entries]
+        live = {f.fingerprint for f in findings}
+        stale = [fp for fp in self.entries if fp not in live]
+        return new, accepted, stale

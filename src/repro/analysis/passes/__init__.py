@@ -1,0 +1,3 @@
+"""Importing this package registers every built-in analyzer pass."""
+
+from . import atomicio, errors, guards, lockorder  # noqa: F401

@@ -1,0 +1,138 @@
+"""atomicio — persistent writes must use fsync-and-rename helpers.
+
+The never-wrong-bytes guarantee extends to crash timing: an index,
+manifest, working-set or recording file that is half-written at the
+moment of a crash must never be *seen* — which is why the blessed
+helpers write a sibling tmp file, flush + ``os.fsync``, then
+``os.replace`` over the destination.  This pass flags raw
+``open(..., "w")`` / ``json.dump`` / ``write_text`` calls in the
+persistence modules that bypass those helpers (rule A1/A2), and audits
+the helpers themselves for the full discipline — a helper that renames
+without fsync can still publish a hole after power loss (rule A3).
+
+Scratch files that are legitimately non-atomic (calibration buffers,
+debug dumps) opt out per line with ``# atomic-ok: <reason>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+from ..config import AnalysisConfig
+from ..model import Finding
+from ..registry import register_pass
+from ..scan import SourceModule, attr_chain, iter_defs
+
+_WRITE_METHODS = {"write_text", "write_bytes"}
+
+
+def _open_write_mode(call: ast.Call) -> Optional[str]:
+    """The mode string when this is ``open(..., "w"/"wb"/"a"/...)``."""
+    fn = call.func
+    name = fn.id if isinstance(fn, ast.Name) else getattr(fn, "attr", None)
+    if name != "open":
+        return None
+    mode: Optional[ast.AST] = None
+    if len(call.args) >= 2:
+        mode = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "mode":
+            mode = kw.value
+    if isinstance(mode, ast.Constant) and isinstance(mode.value, str):
+        if any(c in mode.value for c in "wax+"):
+            return mode.value
+    return None
+
+
+def _scopes(module: SourceModule) -> Iterator[Tuple[str, List[ast.AST]]]:
+    """(qualified scope, own statements) for every def plus module level."""
+    claimed = set()
+    for cls, fn in iter_defs(module):
+        qual = f"{cls}.{fn.name}" if cls else fn.name
+        own: List[ast.AST] = []
+        stack = list(fn.body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            own.append(node)
+            stack.extend(ast.iter_child_nodes(node))
+        yield qual, own
+        claimed.add(id(fn))
+    top: List[ast.AST] = []
+    stack = [n for n in module.tree.body]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        top.append(node)
+        stack.extend(ast.iter_child_nodes(node))
+    yield "<module>", top
+
+
+@register_pass("atomicio",
+               "persistent writes must go through fsync-and-rename helpers")
+def run(modules: Sequence[SourceModule],
+        config: AnalysisConfig) -> List[Finding]:
+    findings: List[Finding] = []
+    for module in modules:
+        in_scope = any(module.rel.startswith(p)
+                       for p in config.persistence_prefixes)
+        helper_quals = {q for m, q in config.atomic_helpers if m == module.rel}
+        if not in_scope and not helper_quals:
+            continue
+        for qual, nodes in _scopes(module):
+            is_helper = qual in helper_quals
+            calls = [n for n in nodes if isinstance(n, ast.Call)]
+            if is_helper:
+                findings.extend(_audit_helper(module, qual, calls))
+                continue
+            if not in_scope:
+                continue
+            for call in calls:
+                chain = attr_chain(call.func) or ""
+                mode = _open_write_mode(call)
+                viol = None
+                if chain in ("json.dump",):
+                    viol = ("A1", "raw json.dump")
+                elif mode is not None:
+                    viol = ("A2", f"raw open(..., {mode!r})")
+                elif chain.split(".")[-1] in _WRITE_METHODS:
+                    viol = ("A2", f"raw {chain.split('.')[-1]}()")
+                if viol is None:
+                    continue
+                if module.markers_at(call.lineno, "atomic-ok"):
+                    continue
+                rule, what = viol
+                findings.append(Finding(
+                    pass_name="atomicio", rule=rule, severity="error",
+                    file=module.rel, line=call.lineno, scope=qual,
+                    detail=what,
+                    message=f"{what} bypasses the fsync-and-rename "
+                            f"helpers; route through an atomic helper or "
+                            f"mark '# atomic-ok: <reason>'",
+                ))
+    return findings
+
+
+def _audit_helper(module: SourceModule, qual: str,
+                  calls: List[ast.Call]) -> List[Finding]:
+    names = {(attr_chain(c.func) or
+              getattr(c.func, "attr", None) or
+              getattr(c.func, "id", "") or "").split(".")[-1]
+             for c in calls}
+    missing = [step for step in ("fsync", "replace") if step not in names]
+    if not missing:
+        return []
+    line = calls[0].lineno if calls else 1
+    return [Finding(
+        pass_name="atomicio", rule="A3", severity="error",
+        file=module.rel, line=line, scope=qual,
+        detail=f"helper missing {'+'.join(missing)}",
+        message=f"atomic-write helper {qual} lacks "
+                f"{' and '.join('os.' + m for m in missing)}: a crash can "
+                f"still publish a truncated or unsynced file",
+    )]

@@ -1,0 +1,177 @@
+"""errors — typed fault taxonomy and replay determinism.
+
+Two families of rules share this pass because they police the same
+thing: code silently changing behaviour out from under the paper's
+measurements.
+
+Error taxonomy (core/faults.py is the contract):
+
+* **E1** — a bare ``except:`` anywhere is an error; it swallows
+  ``KeyboardInterrupt`` along with the fault it meant to handle.
+* **E2** — ``except Exception`` on the tier/restore/serving paths must
+  either be narrowed to the typed ``FaultError`` taxonomy or carry an
+  explicit ``# broad-ok: <reason>`` (the background-prefetch thread
+  that must never kill its worker is the canonical allowlisted case).
+* **E3** — ``raise KeyError`` inside a tier-boundary module needs
+  ``# keyerror-ok: <reason>``: callers use KeyError to mean "digest
+  genuinely unknown/reclaimed", so an undocumented one masquerades as
+  a reclaim where a typed ``TierReadError`` was owed.
+
+Determinism (the seeded loadgen/trace/replay paths):
+
+* **D1** — ``time.time()`` / ``datetime.now()`` in a deterministic
+  module needs ``# wallclock-ok: <reason>`` (metrics and manifest
+  metadata qualify; anything feeding scheduling or traces does not —
+  use the injectable ``_clock``).
+* **D2** — unseeded randomness: ``np.random.default_rng()`` without a
+  seed, any draw from the ``np.random``/``random`` module-global
+  generators, or ``random.Random()`` without a seed.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence
+
+from ..config import AnalysisConfig
+from ..model import Finding
+from ..registry import register_pass
+from ..scan import SourceModule, attr_chain, iter_defs
+
+_BROAD = {"Exception", "BaseException"}
+_WALLCLOCK = {"time.time", "datetime.now", "datetime.datetime.now",
+              "datetime.utcnow", "datetime.datetime.utcnow"}
+_GLOBAL_RANDOM_FNS = {
+    "random", "randint", "uniform", "choice", "choices", "shuffle",
+    "sample", "randrange", "gauss", "normalvariate", "expovariate",
+    "betavariate", "randbytes", "getrandbits", "seed",
+}
+
+
+def _scope_of(module: SourceModule, line: int) -> str:
+    best = "<module>"
+    best_span = None
+    for cls, fn in iter_defs(module):
+        end = getattr(fn, "end_lineno", fn.lineno)
+        if fn.lineno <= line <= end:
+            span = end - fn.lineno
+            if best_span is None or span < best_span:
+                best_span = span
+                best = f"{cls}.{fn.name}" if cls else fn.name
+    return best
+
+
+def _exc_names(node: Optional[ast.AST]) -> List[str]:
+    if node is None:
+        return []
+    if isinstance(node, ast.Tuple):
+        out: List[str] = []
+        for elt in node.elts:
+            out.extend(_exc_names(elt))
+        return out
+    chain = attr_chain(node)
+    return [chain.split(".")[-1]] if chain else []
+
+
+@register_pass("errors",
+               "typed fault taxonomy + seeded-path determinism")
+def run(modules: Sequence[SourceModule],
+        config: AnalysisConfig) -> List[Finding]:
+    findings: List[Finding] = []
+    for module in modules:
+        on_typed_path = any(module.rel.startswith(p)
+                            for p in config.typed_error_prefixes)
+        tier_boundary = module.rel in config.tier_boundary_modules
+        deterministic = module.rel in config.deterministic_modules
+
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.ExceptHandler):
+                names = _exc_names(node.type)
+                if node.type is None:
+                    findings.append(Finding(
+                        pass_name="errors", rule="E1", severity="error",
+                        file=module.rel, line=node.lineno,
+                        scope=_scope_of(module, node.lineno),
+                        detail="bare except",
+                        message="bare 'except:' swallows KeyboardInterrupt "
+                                "and every fault class; name the exceptions",
+                    ))
+                elif any(n in _BROAD for n in names):
+                    if module.markers_at(node.lineno, "broad-ok"):
+                        continue
+                    findings.append(Finding(
+                        pass_name="errors", rule="E2",
+                        severity="error" if on_typed_path else "warning",
+                        file=module.rel, line=node.lineno,
+                        scope=_scope_of(module, node.lineno),
+                        detail="broad except Exception",
+                        message="broad 'except Exception' on a typed-fault "
+                                "path: narrow to the FaultError taxonomy "
+                                "or mark '# broad-ok: <reason>'",
+                    ))
+            elif isinstance(node, ast.Raise) and tier_boundary:
+                exc = node.exc
+                name = None
+                if isinstance(exc, ast.Call):
+                    name = (attr_chain(exc.func) or "").split(".")[-1]
+                elif exc is not None:
+                    name = (attr_chain(exc) or "").split(".")[-1]
+                if name == "KeyError":
+                    if module.markers_at(node.lineno, "keyerror-ok"):
+                        continue
+                    findings.append(Finding(
+                        pass_name="errors", rule="E3", severity="error",
+                        file=module.rel, line=node.lineno,
+                        scope=_scope_of(module, node.lineno),
+                        detail="raise KeyError at tier boundary",
+                        message="KeyError crossing a tier boundary reads as "
+                                "'digest reclaimed'; raise a typed "
+                                "FaultError or mark '# keyerror-ok: "
+                                "<reason>'",
+                    ))
+            elif isinstance(node, ast.Call) and deterministic:
+                findings.extend(_check_determinism(module, node))
+    return findings
+
+
+def _check_determinism(module: SourceModule,
+                       call: ast.Call) -> List[Finding]:
+    chain = attr_chain(call.func) or ""
+    line = call.lineno
+    out: List[Finding] = []
+
+    if chain in _WALLCLOCK:
+        if not module.markers_at(line, "wallclock-ok"):
+            out.append(Finding(
+                pass_name="errors", rule="D1", severity="error",
+                file=module.rel, line=line,
+                scope=_scope_of(module, line),
+                detail=f"wall clock {chain}",
+                message=f"{chain}() in a seeded/deterministic module: use "
+                        f"the injectable clock, or mark '# wallclock-ok: "
+                        f"<reason>' if this is pure metrics/metadata",
+            ))
+        return out
+
+    unseeded = None
+    parts = chain.split(".")
+    if chain.endswith(".default_rng") and not call.args and not call.keywords:
+        unseeded = "np.random.default_rng() without a seed"
+    elif len(parts) == 3 and parts[0] in ("np", "numpy") \
+            and parts[1] == "random" and parts[2] != "default_rng":
+        unseeded = f"module-global numpy RNG ({chain})"
+    elif len(parts) == 2 and parts[0] == "random":
+        if parts[1] == "Random":
+            if not call.args and not call.keywords:
+                unseeded = "random.Random() without a seed"
+        elif parts[1] in _GLOBAL_RANDOM_FNS:
+            unseeded = f"module-global stdlib RNG ({chain})"
+    if unseeded:
+        out.append(Finding(
+            pass_name="errors", rule="D2", severity="error",
+            file=module.rel, line=line, scope=_scope_of(module, line),
+            detail=unseeded,
+            message=f"{unseeded} in a seeded/deterministic module: draw "
+                    f"from an explicitly seeded generator",
+        ))
+    return out

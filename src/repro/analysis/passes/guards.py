@@ -1,0 +1,297 @@
+"""guards — `# guarded-by:` lock-discipline checking.
+
+A field declared with a trailing ``# guarded-by: <lock>`` marker may
+only be accessed inside a ``with <lock>:`` scope (or from a function
+whose header carries ``# holds-lock: <lock>``, asserting its callers
+hold it).  ``# guarded-by: <lock> [writes]`` relaxes reads — the
+publish-subscribe fields (``residency_epoch``) are written under their
+lock but advertised lock-free by design.  A deliberate lock-free access
+is suppressed per line with ``# unguarded-ok: <reason>``.
+
+Scope inference is lexical: the pass tracks the stack of active
+``with`` items per function, resolves ``threading.Condition(lock)``
+wrappers and ``# lock-alias:`` markers to the canonical lock, and
+matches the *receiver* too — ``rec.plans`` wants ``with
+rec.plan_lock:``, not someone else's plan lock — unless the lock lives
+on a different object than the field (the admission lanes are guarded
+by their owning controller's mutex), in which case any holder of that
+lock name counts.  Nested functions (thread bodies, closures) start
+lock-free: a ``with`` around a ``def`` does not protect the body.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from ..config import AnalysisConfig
+from ..model import Finding
+from ..registry import register_pass
+from ..scan import (SourceModule, attr_chain, def_header_span, find_lock_decls,
+                    iter_defs)
+
+
+@dataclass(frozen=True)
+class GuardDecl:
+    module: str
+    owner: str          # declaring class ("" for module level)
+    field: str
+    lock: str           # lock attribute name
+    writes_only: bool
+    line: int
+
+
+def _parse_marker_value(value: str) -> Tuple[str, bool]:
+    writes_only = False
+    if value.endswith("[writes]"):
+        writes_only = True
+        value = value[: -len("[writes]")].strip()
+    return value.split()[0] if value.split() else "", writes_only
+
+
+def _field_targets(node: ast.AST) -> List[str]:
+    """Field names declared by an Assign/AnnAssign: ``self.X = ...`` in a
+    method or a bare ``X: T [= ...]`` in a class body."""
+    targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+    out = []
+    for t in targets:
+        chain = attr_chain(t)
+        if chain is None:
+            continue
+        parts = chain.split(".")
+        if len(parts) == 2 and parts[0] == "self":
+            out.append(parts[1])
+        elif len(parts) == 1:
+            out.append(parts[0])
+    return out
+
+
+def collect_guard_decls(module: SourceModule) -> Tuple[List[GuardDecl],
+                                                       List[Finding]]:
+    found: List[GuardDecl] = []
+    bad: List[Finding] = []
+
+    def scan(stmts, owner: str) -> None:
+        for node in stmts:
+            if isinstance(node, ast.ClassDef):
+                scan(node.body, node.name if not owner else f"{owner}.{node.name}")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scan(node.body, owner)
+            elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+                end = getattr(node, "end_lineno", node.lineno)
+                marks = module.markers_in(node.lineno, end, "guarded-by")
+                if not marks:
+                    continue
+                lock, writes_only = _parse_marker_value(marks[0].value)
+                fields = _field_targets(node)
+                if not lock or not fields:
+                    bad.append(Finding(
+                        pass_name="guards", rule="G003", severity="error",
+                        file=module.rel, line=node.lineno, scope=owner or "<module>",
+                        detail=f"unparseable guarded-by at {owner}",
+                        message="guarded-by marker names no lock or is not on "
+                                "a field declaration",
+                    ))
+                    continue
+                for f in fields:
+                    found.append(GuardDecl(
+                        module=module.rel, owner=owner, field=f, lock=lock,
+                        writes_only=writes_only, line=node.lineno,
+                    ))
+    scan(module.tree.body, "")
+    return found, bad
+
+
+def _alias_map(module: SourceModule) -> Dict[str, str]:
+    """lock attr -> canonical attr (Condition wrappers, lock-alias)."""
+    out: Dict[str, str] = {}
+    for d in find_lock_decls(module):
+        if d.alias:
+            out[d.attr] = d.alias
+    return out
+
+
+def _write_target_ids(fn: ast.AST) -> Set[int]:
+    writes: Set[int] = set()
+    for node in ast.walk(fn):
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            targets = [node.target]
+        elif isinstance(node, ast.Delete):
+            targets = list(node.targets)
+        for t in targets:
+            for sub in ast.walk(t):
+                if isinstance(sub, ast.Attribute):
+                    writes.add(id(sub))
+                    break  # only the outermost attribute is the store
+    return writes
+
+
+_TYPING_NAMES = {"Optional", "List", "Dict", "Set", "Tuple", "Sequence",
+                 "Iterable", "Iterator", "Union", "Any", "Callable"}
+
+
+def _local_type_names(fn: ast.AST) -> Dict[str, Set[str]]:
+    """Best-effort receiver typing from parameter annotations and
+    ``x = ClassName(...)`` constructor assignments.  Used only to rule a
+    receiver *out* — a name with no inferred type stays checkable, so a
+    miss here can only silence a finding, never invent one."""
+    out: Dict[str, Set[str]] = {}
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs
+              + ([args.vararg] if args.vararg else [])
+              + ([args.kwarg] if args.kwarg else [])):
+        if a.annotation is not None:
+            names = {n.id for n in ast.walk(a.annotation)
+                     if isinstance(n, ast.Name)} - _TYPING_NAMES
+            if names:
+                out[a.arg] = names
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)):
+            callee = attr_chain(node.value.func)
+            if callee:
+                base = callee.split(".")[-1]
+                if base[:1].isupper():
+                    out.setdefault(node.targets[0].id, set()).add(base)
+    return out
+
+
+Held = Set[Tuple[str, str]]  # (receiver chain or "*", lock attr)
+
+
+def _with_locks(node: ast.With, aliases: Dict[str, str]) -> Held:
+    held: Held = set()
+    for item in node.items:
+        chain = attr_chain(item.context_expr)
+        if chain is None or "." not in chain:
+            continue
+        recv, attr = chain.rsplit(".", 1)
+        held.add((recv, attr))
+        if attr in aliases:
+            held.add((recv, aliases[attr]))
+    return held
+
+
+@register_pass("guards",
+               "guarded-by lock discipline on annotated fields")
+def run(modules: Sequence[SourceModule],
+        config: AnalysisConfig) -> List[Finding]:
+    findings: List[Finding] = []
+    for module in modules:
+        decls, bad = collect_guard_decls(module)
+        findings.extend(bad)
+        if not decls:
+            continue
+        by_field: Dict[str, List[GuardDecl]] = {}
+        for d in decls:
+            by_field.setdefault(d.field, []).append(d)
+        lock_owners = {(d.owner, d.attr) for d in find_lock_decls(module)}
+        aliases = _alias_map(module)
+
+        for cls, fn in iter_defs(module):
+            lo, hi = def_header_span(fn)
+            base_held: Held = set()
+            for mk in module.markers_in(lo, hi, "holds-lock"):
+                for name in mk.value.replace(",", " ").split():
+                    base_held.add(("*", name))
+            writes = _write_target_ids(fn)
+            findings.extend(_check_function(
+                module, cls, fn, by_field, lock_owners, aliases,
+                base_held, writes,
+            ))
+    return findings
+
+
+def _check_function(module: SourceModule, cls: Optional[str], fn: ast.AST,
+                    by_field: Dict[str, List[GuardDecl]],
+                    lock_owners: Set[Tuple[str, str]],
+                    aliases: Dict[str, str],
+                    base_held: Held, writes: Set[int]) -> List[Finding]:
+    out: List[Finding] = []
+    scope = f"{cls}.{fn.name}" if cls else fn.name
+    local_types = _local_type_names(fn)
+
+    def resolve_decl(recv: str, field: str) -> Optional[GuardDecl]:
+        cands = by_field.get(field, [])
+        if not cands:
+            return None
+        if recv == "self":
+            for d in cands:
+                if d.owner == cls:
+                    return d
+            return None
+        return cands[0] if len(cands) == 1 else None
+
+    def visit(node: ast.AST, held: Held) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            return  # separate scope: iter_defs visits it with a fresh stack
+        if isinstance(node, ast.With):
+            inner = held | _with_locks(node, aliases)
+            for item in node.items:
+                visit(item.context_expr, held)
+                if item.optional_vars is not None:
+                    visit(item.optional_vars, held)
+            for stmt in node.body:
+                visit(stmt, inner)
+            return
+        if isinstance(node, ast.Attribute):
+            check_access(node, held)
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    def check_access(node: ast.Attribute, held: Held) -> None:
+        chain = attr_chain(node)
+        if chain is None:
+            recv = None
+        else:
+            recv = chain.rsplit(".", 1)[0] if "." in chain else None
+        if recv is None:
+            return
+        decl = resolve_decl(recv, node.attr)
+        if decl is None:
+            return
+        if recv == "self" and cls == decl.owner and fn.name == "__init__":
+            return
+        if node.lineno == decl.line:
+            return
+        is_write = id(node) in writes
+        if decl.writes_only and not is_write:
+            return
+        if module.markers_at(node.lineno, "unguarded-ok"):
+            return
+        internal = (decl.owner, decl.lock) in lock_owners
+        if internal and recv != "self" and "." not in recv:
+            # a non-self receiver whose inferred type is some *other*
+            # class just shares a field name with the guarded owner
+            # (e.g. a local PrefetchStats mirroring the store counters)
+            known = local_types.get(recv)
+            if known is not None and decl.owner.split(".")[-1] not in known:
+                return
+        for hrecv, hattr in held:
+            if hattr != decl.lock and aliases.get(hattr) != decl.lock:
+                continue
+            if not internal or hrecv in ("*", recv):
+                return
+        if ("*", decl.lock) in held:
+            return
+        kind = "write" if is_write else "read"
+        out.append(Finding(
+            pass_name="guards",
+            rule="G001" if is_write else "G002",
+            severity="error" if is_write else "warning",
+            file=module.rel, line=node.lineno, scope=scope,
+            detail=f"{decl.owner or '<module>'}.{decl.field} "
+                   f"[{kind}] requires {decl.lock}",
+            message=f"{kind} of {decl.field!r} (guarded by "
+                    f"{decl.lock!r}) outside its lock",
+        ))
+
+    for stmt in fn.body:
+        visit(stmt, set(base_held))
+    return out

@@ -1,0 +1,348 @@
+"""lockorder — lock-acquisition nesting graph and deadlock cycles.
+
+Builds a directed graph over the codebase's named locks: an edge
+``A -> B`` means some code path acquires ``B`` while holding ``A``.
+Holding is tracked lexically (``with`` nesting inside one function,
+plus ``# holds-lock:`` header markers for functions whose callers hold
+a lock), and one step further through the call graph: if ``f`` calls
+``g`` under lock ``A``, every lock ``g`` (transitively) acquires gets
+an ``A ->`` edge.  Call targets resolve conservatively — ``self.m()``
+to the enclosing class, bare names to the module, anything else only
+when the method name is unique across the scanned tree and not in the
+config's ambiguous-name list; unresolvable calls contribute nothing.
+
+A cycle in this graph is a potential deadlock (two threads taking the
+locks in opposite orders) and is reported as an error; acquiring a
+non-reentrant lock while already holding it is reported separately.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from ..config import AnalysisConfig
+from ..model import Finding
+from ..registry import register_pass
+from ..scan import (LockDecl, SourceModule, attr_chain, def_header_span,
+                    find_lock_decls, iter_defs)
+
+FuncKey = Tuple[str, str]           # (module rel path, Class.name or name)
+Edge = Tuple[str, str]              # (lock id, lock id)
+
+
+@dataclass
+class LockGraph:
+    """The acquisition graph plus enough provenance to explain an edge."""
+
+    edges: Dict[Edge, Tuple[str, int]]          # edge -> first witness
+    acquired: Dict[FuncKey, Set[str]]           # transitive per function
+    decls: Dict[str, LockDecl]                  # lock id -> declaration
+
+    def successors(self, lock: str) -> List[str]:
+        return sorted(b for (a, b) in self.edges if a == lock)
+
+    def cycles(self) -> List[List[str]]:
+        """Strongly connected components with more than one lock, plus
+        non-trivial self-loops; each returned as a canonical rotation."""
+        adj: Dict[str, List[str]] = {}
+        nodes: Set[str] = set()
+        for a, b in self.edges:
+            adj.setdefault(a, []).append(b)
+            nodes.update((a, b))
+        index: Dict[str, int] = {}
+        low: Dict[str, int] = {}
+        on: Set[str] = set()
+        stack: List[str] = []
+        sccs: List[List[str]] = []
+        counter = [0]
+
+        def strongconnect(v: str) -> None:
+            work = [(v, iter(adj.get(v, ())))]
+            index[v] = low[v] = counter[0]
+            counter[0] += 1
+            stack.append(v)
+            on.add(v)
+            while work:
+                node, it = work[-1]
+                advanced = False
+                for w in it:
+                    if w not in index:
+                        index[w] = low[w] = counter[0]
+                        counter[0] += 1
+                        stack.append(w)
+                        on.add(w)
+                        work.append((w, iter(adj.get(w, ()))))
+                        advanced = True
+                        break
+                    if w in on:
+                        low[node] = min(low[node], index[w])
+                if advanced:
+                    continue
+                work.pop()
+                if work:
+                    parent = work[-1][0]
+                    low[parent] = min(low[parent], low[node])
+                if low[node] == index[node]:
+                    comp = []
+                    while True:
+                        w = stack.pop()
+                        on.discard(w)
+                        comp.append(w)
+                        if w == node:
+                            break
+                    if len(comp) > 1:
+                        sccs.append(comp)
+
+        for v in sorted(nodes):
+            if v not in index:
+                strongconnect(v)
+        out = []
+        for comp in sccs:
+            comp = sorted(comp)
+            out.append(comp)
+        return out
+
+
+def _decl_index(modules: Sequence[SourceModule]
+                ) -> Tuple[Dict[str, LockDecl], Dict[str, List[LockDecl]]]:
+    by_id: Dict[str, LockDecl] = {}
+    by_attr: Dict[str, List[LockDecl]] = {}
+    for m in modules:
+        for d in find_lock_decls(m):
+            lid = _lock_id(d)
+            by_id[lid] = d
+            by_attr.setdefault(d.attr, []).append(d)
+    return by_id, by_attr
+
+
+def _lock_id(d: LockDecl) -> str:
+    return f"{d.owner}.{d.attr}" if d.owner else f"{d.module}:{d.attr}"
+
+
+class _Resolver:
+    """Resolve with-items, holds-lock names, and call targets."""
+
+    def __init__(self, modules: Sequence[SourceModule],
+                 config: AnalysisConfig):
+        self.config = config
+        self.by_id, self.by_attr = _decl_index(modules)
+        # method name -> defs (for cross-class call resolution)
+        self.defs: Dict[FuncKey, ast.AST] = {}
+        self.by_name: Dict[str, List[FuncKey]] = {}
+        self.module_of: Dict[FuncKey, SourceModule] = {}
+        for m in modules:
+            for cls, fn in iter_defs(m):
+                qual = f"{cls}.{fn.name}" if cls else fn.name
+                key = (m.rel, qual)
+                self.defs[key] = fn
+                self.by_name.setdefault(fn.name, []).append(key)
+                self.module_of[key] = m
+
+    def canonical(self, d: LockDecl) -> str:
+        """Follow Condition/alias wrappers to the canonical lock id."""
+        seen = set()
+        while d.alias and d.alias not in seen:
+            seen.add(d.alias)
+            nxt = None
+            for cand in self.by_attr.get(d.alias, []):
+                if cand.owner == d.owner and cand.module == d.module:
+                    nxt = cand
+                    break
+            if nxt is None:
+                cands = self.by_attr.get(d.alias, [])
+                nxt = cands[0] if len(cands) == 1 else None
+            if nxt is None:
+                break
+            d = nxt
+        return _lock_id(d)
+
+    def resolve_lock(self, chain: str, module: SourceModule,
+                     cls: Optional[str]) -> Optional[str]:
+        """Lock id for a with-item / holds-lock chain like ``self._mu``,
+        ``rec.plan_lock`` or a module-level ``_pool_lock``."""
+        parts = chain.split(".")
+        attr = parts[-1]
+        cands = self.by_attr.get(attr, [])
+        if not cands:
+            return None
+        if len(parts) == 1:
+            for d in cands:
+                if d.module == module.rel and not d.owner:
+                    return self.canonical(d)
+            return None
+        if parts[0] == "self" and len(parts) == 2 and cls is not None:
+            for d in cands:
+                if d.owner == cls and d.module == module.rel:
+                    return self.canonical(d)
+        uniq = {(_lock_id(d)) for d in cands}
+        if len(uniq) == 1:
+            return self.canonical(cands[0])
+        return None
+
+    def resolve_call(self, call: ast.Call, module: SourceModule,
+                     cls: Optional[str]) -> Optional[FuncKey]:
+        chain = attr_chain(call.func)
+        if chain is None:
+            return None
+        parts = chain.split(".")
+        name = parts[-1]
+        if len(parts) == 1:
+            key = (module.rel, name)
+            return key if key in self.defs else None
+        if parts[0] == "self" and len(parts) == 2 and cls is not None:
+            key = (module.rel, f"{cls}.{name}")
+            if key in self.defs:
+                return key
+        if name in self.config.ambiguous_call_names:
+            return None
+        # receiver is a lock/condition (e.g. self._cv.wait()): not a call
+        # into the codebase
+        if len(parts) >= 2 and parts[-2] in self.by_attr:
+            return None
+        cands = self.by_name.get(name, [])
+        return cands[0] if len(cands) == 1 else None
+
+
+def build_lock_graph(modules: Sequence[SourceModule],
+                     config: AnalysisConfig) -> LockGraph:
+    res = _Resolver(modules, config)
+
+    # lexical acquisitions + call targets per function
+    lexical: Dict[FuncKey, Set[str]] = {}
+    callees: Dict[FuncKey, Set[FuncKey]] = {}
+    entry_holds: Dict[FuncKey, Set[str]] = {}
+    for key, fn in res.defs.items():
+        module = res.module_of[key]
+        cls = key[1].rsplit(".", 1)[0] if "." in key[1] else None
+        acquired: Set[str] = set()
+        called: Set[FuncKey] = set()
+        for node in _own_nodes(fn):
+            if isinstance(node, ast.With):
+                for item in node.items:
+                    chain = attr_chain(item.context_expr)
+                    if chain:
+                        lid = res.resolve_lock(chain, module, cls)
+                        if lid:
+                            acquired.add(lid)
+            elif isinstance(node, ast.Call):
+                tgt = res.resolve_call(node, module, cls)
+                if tgt is not None and tgt != key:
+                    called.add(tgt)
+        lexical[key] = acquired
+        callees[key] = called
+        lo, hi = def_header_span(fn)
+        holds: Set[str] = set()
+        for mk in module.markers_in(lo, hi, "holds-lock"):
+            for name in mk.value.replace(",", " ").split():
+                lid = res.resolve_lock(
+                    name if "." in name else f"self.{name}", module, cls
+                ) or res.resolve_lock(name, module, cls)
+                if lid:
+                    holds.add(lid)
+        entry_holds[key] = holds
+
+    # transitive acquisitions: fixpoint over the call graph
+    acquired_star: Dict[FuncKey, Set[str]] = {
+        k: set(v) for k, v in lexical.items()
+    }
+    changed = True
+    while changed:
+        changed = False
+        for key, called in callees.items():
+            cur = acquired_star[key]
+            before = len(cur)
+            for c in called:
+                cur |= acquired_star.get(c, set())
+            if len(cur) != before:
+                changed = True
+
+    # edges: walk each function with the held-stack
+    edges: Dict[Edge, Tuple[str, int]] = {}
+
+    def note(a: str, b: str, module: SourceModule, line: int) -> None:
+        edges.setdefault((a, b), (module.rel, line))
+
+    for key, fn in res.defs.items():
+        module = res.module_of[key]
+        cls = key[1].rsplit(".", 1)[0] if "." in key[1] else None
+
+        def visit(node: ast.AST, held: Set[str]) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda, ast.ClassDef)):
+                return
+            if isinstance(node, ast.With):
+                got: Set[str] = set()
+                for item in node.items:
+                    chain = attr_chain(item.context_expr)
+                    lid = res.resolve_lock(chain, module, cls) if chain else None
+                    if lid:
+                        got.add(lid)
+                        for h in held:
+                            note(h, lid, module, node.lineno)
+                for stmt in node.body:
+                    visit(stmt, held | got)
+                return
+            if isinstance(node, ast.Call):
+                tgt = res.resolve_call(node, module, cls)
+                if tgt is not None and held:
+                    for lid in acquired_star.get(tgt, ()):
+                        for h in held:
+                            note(h, lid, module, node.lineno)
+            for child in ast.iter_child_nodes(node):
+                visit(child, held)
+
+        for stmt in fn.body:
+            visit(stmt, set(entry_holds[key]))
+
+    return LockGraph(edges=edges, acquired=acquired_star, decls=res.by_id)
+
+
+def _own_nodes(fn: ast.AST):
+    """ast.walk limited to the function's own body (nested defs and
+    classes are separate scopes)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+@register_pass("lockorder",
+               "lock-acquisition nesting graph; cycles are potential "
+               "deadlocks")
+def run(modules: Sequence[SourceModule],
+        config: AnalysisConfig) -> List[Finding]:
+    graph = build_lock_graph(modules, config)
+    findings: List[Finding] = []
+    for comp in graph.cycles():
+        cyc = " -> ".join(comp + [comp[0]])
+        witness_edges = [
+            (e, w) for e, w in sorted(graph.edges.items())
+            if e[0] in comp and e[1] in comp and e[0] != e[1]
+        ]
+        wfile, wline = witness_edges[0][1] if witness_edges else ("?", 0)
+        findings.append(Finding(
+            pass_name="lockorder", rule="L001", severity="error",
+            file=wfile, line=wline, scope="<graph>",
+            detail=f"cycle {cyc}",
+            message=f"lock-order cycle (potential deadlock): {cyc}",
+        ))
+    for (a, b), (wfile, wline) in sorted(graph.edges.items()):
+        if a != b:
+            continue
+        decl = graph.decls.get(a)
+        if decl is not None and decl.kind in config.reentrant_kinds:
+            continue
+        findings.append(Finding(
+            pass_name="lockorder", rule="L002", severity="error",
+            file=wfile, line=wline, scope="<graph>",
+            detail=f"self-acquire {a}",
+            message=f"non-reentrant lock {a} acquired while already "
+                    f"held (self-deadlock)",
+        ))
+    return findings

@@ -1,0 +1,59 @@
+"""Pass registry: passes self-register at import time and the CLI/tests
+select them by name.  A pass is a callable taking the loaded modules and
+the :class:`~repro.analysis.config.AnalysisConfig`, yielding findings."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Sequence
+
+from .config import AnalysisConfig
+from .model import Finding
+from .scan import SourceModule
+
+PassFn = Callable[[Sequence[SourceModule], AnalysisConfig], List[Finding]]
+
+
+@dataclass(frozen=True)
+class AnalyzerPass:
+    name: str
+    description: str
+    run: PassFn
+
+
+PASSES: Dict[str, AnalyzerPass] = {}
+
+
+def register_pass(name: str, description: str) -> Callable[[PassFn], PassFn]:
+    def deco(fn: PassFn) -> PassFn:
+        if name in PASSES:
+            raise ValueError(f"duplicate analyzer pass {name!r}")
+        PASSES[name] = AnalyzerPass(name=name, description=description, run=fn)
+        return fn
+    return deco
+
+
+def all_passes() -> List[AnalyzerPass]:
+    # import for side effect: each pass module registers itself
+    from . import passes  # noqa: F401
+    return [PASSES[k] for k in sorted(PASSES)]
+
+
+def get_pass(name: str) -> AnalyzerPass:
+    from . import passes  # noqa: F401
+    try:
+        return PASSES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown pass {name!r}; available: {', '.join(sorted(PASSES))}"
+        ) from None
+
+
+def run_passes(modules: Sequence[SourceModule], config: AnalysisConfig,
+               names: Sequence[str] = ()) -> List[Finding]:
+    selected = [get_pass(n) for n in names] if names else all_passes()
+    findings: List[Finding] = []
+    for p in selected:
+        findings.extend(p.run(modules, config))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule, f.detail))
+    return findings

@@ -1,0 +1,269 @@
+"""Source loading and shared AST utilities for the analyzer passes.
+
+This layer owns everything the passes share: reading a package tree
+into parsed :class:`SourceModule` objects, extracting the comment
+*markers* that carry the annotation conventions (``# guarded-by:``,
+``# holds-lock:``, ``# broad-ok:`` …), and discovering lock
+declarations (``self._lock = threading.Lock()``, dataclass
+``field(default_factory=threading.Lock)``, ``threading.Condition``
+wrappers) so both the guards and lockorder passes agree on what a
+"lock" is.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+# the full annotation vocabulary; docs/analysis.md is the user-facing
+# catalog and must stay in sync with this set
+MARKER_KINDS = (
+    "guarded-by",      # field declaration: access requires this lock
+    "holds-lock",      # def: body runs with these locks already held
+    "unguarded-ok",    # access line: deliberate lock-free access (reason)
+    "lock-alias",      # lock declaration: holding this == holding <alias>
+    "broad-ok",        # except line: intentional broad catch (reason)
+    "keyerror-ok",     # raise line: KeyError is this API's contract
+    "wallclock-ok",    # call line: wall-clock time is metadata/metrics
+    "atomic-ok",       # write line: non-atomic write is fine (scratch file)
+)
+
+_MARKER_RE = re.compile(
+    r"#\s*(" + "|".join(MARKER_KINDS) + r")\s*:\s*([^#]*)"
+)
+
+
+@dataclass
+class Marker:
+    kind: str
+    value: str
+    line: int
+
+
+@dataclass
+class SourceModule:
+    """One parsed file: source text, AST, and per-line markers."""
+
+    path: str                      # absolute
+    rel: str                       # relative to the scanned root, "/"-sep
+    source: str
+    tree: ast.Module
+    markers: Dict[int, List[Marker]] = field(default_factory=dict)
+
+    @property
+    def lines(self) -> List[str]:
+        return self.source.splitlines()
+
+    def markers_at(self, line: int, kind: Optional[str] = None) -> List[Marker]:
+        out = self.markers.get(line, [])
+        if kind is not None:
+            out = [m for m in out if m.kind == kind]
+        return out
+
+    def markers_in(self, lo: int, hi: int, kind: str) -> List[Marker]:
+        """Markers of ``kind`` on any line in [lo, hi] — used for multi-line
+        ``def`` signatures, where the marker may sit on any header line."""
+        out: List[Marker] = []
+        for ln in range(lo, hi + 1):
+            out.extend(self.markers_at(ln, kind))
+        return out
+
+
+def _extract_markers(source: str) -> Dict[int, List[Marker]]:
+    markers: Dict[int, List[Marker]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        for m in _MARKER_RE.finditer(text):
+            markers.setdefault(i, []).append(
+                Marker(kind=m.group(1), value=m.group(2).strip(), line=i)
+            )
+    return markers
+
+
+def load_module(path: str, rel: str) -> SourceModule:
+    with open(path) as f:
+        source = f.read()
+    tree = ast.parse(source, filename=path)
+    return SourceModule(path=path, rel=rel, source=source, tree=tree,
+                        markers=_extract_markers(source))
+
+
+def load_modules(root: str,
+                 rel_filter: Optional[Sequence[str]] = None
+                 ) -> List[SourceModule]:
+    """Parse every ``.py`` under ``root`` (skipping caches/hidden dirs).
+    ``rel_filter`` restricts to relative paths with any of the prefixes."""
+    modules: List[SourceModule] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(
+            d for d in dirnames
+            if not d.startswith(".") and d != "__pycache__"
+        )
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            if rel_filter and not any(rel.startswith(p) for p in rel_filter):
+                continue
+            modules.append(load_module(path, rel))
+    return modules
+
+
+# --------------------------------------------------------------- AST helpers
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name for ``a.b.c`` expressions; None when any link is not a
+    plain Name/Attribute (calls, subscripts …)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def def_header_span(fn: ast.AST) -> Tuple[int, int]:
+    """Line range of a def's header (decorators excluded): ``def`` line
+    through the line before the first body statement."""
+    first = fn.body[0].lineno if getattr(fn, "body", None) else fn.lineno
+    return fn.lineno, max(fn.lineno, first - 1)
+
+
+def iter_defs(module: SourceModule
+              ) -> Iterator[Tuple[Optional[str], ast.AST]]:
+    """Yield (class name or None, funcdef) for every function in the
+    module, including methods of nested classes (qualified A.B)."""
+
+    def walk(node: ast.AST, cls: Optional[str]) -> Iterator:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                sub = child.name if cls is None else f"{cls}.{child.name}"
+                yield from walk(child, sub)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield cls, child
+                yield from walk(child, cls)
+            else:
+                # descend through with/if/try/loop bodies: a def nested
+                # inside a statement (thread bodies under `with`) is still
+                # a function of this module
+                yield from walk(child, cls)
+
+    yield from walk(module.tree, None)
+
+
+# ---------------------------------------------------------- lock discovery
+
+@dataclass(frozen=True)
+class LockDecl:
+    """One discovered lock attribute.
+
+    ``owner`` is the declaring class ("" for module level), ``attr`` the
+    attribute name, ``kind`` Lock/RLock/Condition/Semaphore, and
+    ``alias`` the attribute whose lock this one wraps (a
+    ``threading.Condition(self._mu)`` holds ``_mu``; an explicit
+    ``# lock-alias: X`` marker has the same effect)."""
+
+    module: str
+    owner: str
+    attr: str
+    kind: str
+    line: int
+    alias: Optional[str] = None
+
+    @property
+    def qualname(self) -> str:
+        base = self.owner or "<module>"
+        return f"{base}.{self.attr}"
+
+
+_LOCK_CTORS = {"Lock": "Lock", "RLock": "RLock",
+               "Condition": "Condition", "Semaphore": "Semaphore",
+               "BoundedSemaphore": "Semaphore"}
+
+
+def _lock_ctor_kind(call: ast.AST) -> Optional[str]:
+    if not isinstance(call, ast.Call):
+        return None
+    fn = call.func
+    name = None
+    if isinstance(fn, ast.Attribute):
+        name = fn.attr
+    elif isinstance(fn, ast.Name):
+        name = fn.id
+    return _LOCK_CTORS.get(name or "")
+
+
+def _condition_alias(call: ast.Call) -> Optional[str]:
+    if call.args:
+        chain = attr_chain(call.args[0])
+        if chain:
+            return chain.split(".")[-1]
+    return None
+
+
+def find_lock_decls(module: SourceModule) -> List[LockDecl]:
+    decls: List[LockDecl] = []
+
+    def scan_assign(node: ast.AST, owner: str) -> None:
+        value = getattr(node, "value", None)
+        kind = _lock_ctor_kind(value)
+        if kind is None:
+            # dataclass: plan_lock: Lock = field(default_factory=threading.Lock)
+            if isinstance(value, ast.Call) and (
+                getattr(value.func, "id", None) == "field"
+                or getattr(value.func, "attr", None) == "field"
+            ):
+                for kw in value.keywords:
+                    if kw.arg == "default_factory":
+                        chain = attr_chain(kw.value) or ""
+                        tail = chain.split(".")[-1]
+                        if tail in _LOCK_CTORS:
+                            kind = _LOCK_CTORS[tail]
+            if kind is None:
+                return
+        targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+        for t in targets:
+            chain = attr_chain(t)
+            if chain is None:
+                continue
+            parts = chain.split(".")
+            if len(parts) == 2 and parts[0] == "self":
+                attr = parts[1]
+            elif len(parts) == 1:
+                attr = parts[0]
+            else:
+                continue
+            alias = None
+            if kind == "Condition" and isinstance(value, ast.Call):
+                alias = _condition_alias(value)
+            for mk in module.markers_at(node.lineno, "lock-alias"):
+                alias = mk.value.split()[0]
+            decls.append(LockDecl(module=module.rel, owner=owner, attr=attr,
+                                  kind=kind, line=node.lineno, alias=alias))
+
+    for cls, fn in iter_defs(module):
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                scan_assign(node, cls or "")
+    for node in module.tree.body:
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            scan_assign(node, "")
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                    scan_assign(sub, node.name)
+    # dedupe (an attr assigned in several methods)
+    seen = set()
+    out = []
+    for d in decls:
+        key = (d.owner, d.attr)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(d)
+    return out

@@ -243,7 +243,7 @@ class PackWriter:
         # old payloads — "wb" here would destroy them.  Appending is safe:
         # existing offsets stay valid, and the index dedup means identical
         # re-captures write nothing at all.
-        self._f = open(path, "ab")
+        self._f = open(path, "ab")  # atomic-ok: append-only pack; readers only see offsets the fsynced index publishes
         self.pack_id = pack_id
         self.offset = self._f.tell()
 

@@ -180,7 +180,7 @@ def calibrate_container(tmpdir: str, nbytes: int = 64 * 1024 * 1024) -> StorageM
 
     path = os.path.join(tmpdir, "calib.bin")
     buf = np.random.randint(0, 255, nbytes, dtype=np.uint8)
-    with open(path, "wb") as f:
+    with open(path, "wb") as f:  # atomic-ok: throwaway calibration scratch file, not persistent state
         f.write(buf.tobytes())
         os.fsync(f.fileno())
 

@@ -67,19 +67,19 @@ class FunctionRecord:
     runtime: str
     diff: SnapshotManifest
     full: SnapshotManifest              # REAP baseline needs a full snapshot
-    ws: Optional[WorkingSet] = None     # over the diff (SnapFaaS)
-    ws_full: Optional[WorkingSet] = None  # over the full snapshot (REAP)
+    ws: Optional[WorkingSet] = None     # over the diff (SnapFaaS)  # guarded-by: plan_lock [writes]
+    ws_full: Optional[WorkingSet] = None  # over the full (REAP)  # guarded-by: plan_lock [writes]
     # measured working set: chunks recorded from real profiled invocations
     # (REAP record mode); persisted per function, survives reopen, merged
     # across profiles.  When present it overrides declared access logs.
-    recording: Optional[ChunkRecording] = None
+    recording: Optional[ChunkRecording] = None  # guarded-by: plan_lock [writes]
     source_path: str = ""               # original checkpoint (SEUSS/regular)
     init_compute_s: float = 0.0         # measured function-init compute
-    plans: Dict[str, RestorePlan] = field(default_factory=dict)  # per strategy
+    plans: Dict[str, RestorePlan] = field(default_factory=dict)  # per strategy  # guarded-by: plan_lock
     # cached eager-set refs per planner category (residency-independent;
     # cleared with the working set) — keeps tier-movement replans to a
     # residency() dict lookup instead of two full resolve() passes
-    category_refs: Optional[Dict[str, List[ChunkRef]]] = None
+    category_refs: Optional[Dict[str, List[ChunkRef]]] = None  # guarded-by: plan_lock
     # serialises plan build + tier-split refresh: concurrent refreshes
     # interleaving their (tier_split, residency_epoch) writes could pin a
     # stale split under the newest epoch — permanently, until the next
@@ -111,7 +111,7 @@ class ZygoteRegistry:
         # chunk lost or corrupted in every stream tier re-synthesizes from
         # the pool's bytes (digest-verified by the store before it is
         # served or re-registered)
-        self._base_index: Optional[Dict[str, Tuple[str, Any, int]]] = None
+        self._base_index: Optional[Dict[str, Tuple[str, Any, int]]] = None  # guarded-by: _base_index_lock
         self._base_index_lock = threading.Lock()
         self.store.add_fallback_source(self._base_chunk_payload)
 
@@ -251,7 +251,7 @@ class ZygoteRegistry:
         # a persisted recording from an earlier profiled run survives
         # registry reopen / re-registration; a truncated or corrupt file
         # loads as None (fall back to declared/eager behavior, never error)
-        rec.recording = ChunkRecording.load(self.root, name)
+        rec.recording = ChunkRecording.load(self.root, name)  # unguarded-ok: record not yet published
         self.functions[name] = rec
         return rec
 
@@ -265,7 +265,7 @@ class ZygoteRegistry:
         """
         rec = self.functions.pop(name, None)
         if rec is None:
-            raise KeyError(name)
+            raise KeyError(name)  # keyerror-ok: lookup contract — name never registered, not a fault
         dead = self.store.unpin(
             set(manifest_digests(rec.diff, rec.full)), owner=name
         )
@@ -383,8 +383,20 @@ class ZygoteRegistry:
 
         Cached on the record: the categorisation depends only on manifests
         and working sets, not tier residency, so tier movement never pays
-        the resolve passes again."""
+        the resolve passes again.
+
+        Compute *and* publish run under ``plan_lock``: a lock-free
+        check-then-act here could read the old working set, lose the race
+        with :meth:`generate_working_set`'s swap-and-clear, and then
+        publish refs cut from the dead WS — permanently, since nothing
+        would ever invalidate them again."""
         rec = self.functions[name]
+        with rec.plan_lock:
+            return self._category_refs_locked(rec)
+
+    def _category_refs_locked(
+        self, rec: FunctionRecord
+    ) -> Dict[str, List[ChunkRef]]:  # holds-lock: plan_lock
         if rec.category_refs is not None:
             return rec.category_refs
         base = self.bases[rec.runtime]
@@ -519,7 +531,7 @@ class ZygoteRegistry:
     def _restore_plan_locked(
         self, rec: FunctionRecord, name: str, strategy: str,
         *, demand_paged: bool = False,
-    ) -> RestorePlan:
+    ) -> RestorePlan:  # holds-lock: plan_lock
         key = strategy + ("+demand" if demand_paged else "")
         plan = rec.plans.get(key)
         if plan is not None:

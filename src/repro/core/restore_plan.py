@@ -330,8 +330,8 @@ def execute_restore_plan(
             def _bg() -> None:
                 try:
                     store.prefetch(refs)
-                except Exception:
-                    pass  # best-effort: misses fault in verified
+                except Exception:  # broad-ok: best-effort background warming must never kill the worker
+                    pass  # misses fault in verified demand reads later
 
             th = threading.Thread(
                 target=_bg, name=f"ws-prefetch-{plan.function}", daemon=True

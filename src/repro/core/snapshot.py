@@ -136,11 +136,17 @@ class SnapshotManifest:
         )
 
     def save(self, root: str) -> str:
+        """Persist the manifest with the same fsync-and-rename discipline
+        as the chunk index: rename-without-fsync can publish a manifest
+        whose bytes never reached the platter, and a manifest that names
+        chunks is the one file a crash must never truncate."""
         os.makedirs(os.path.join(root, "manifests"), exist_ok=True)
         p = os.path.join(root, "manifests", f"{self.snapshot_id}.json")
         tmp = p + ".tmp"
         with open(tmp, "w") as f:
             json.dump(self.to_json(), f)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, p)
         return p
 

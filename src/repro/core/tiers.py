@@ -399,26 +399,30 @@ class TieredChunkStore:
         self._remote = None
         if os.path.isdir(os.path.join(remote_root, "packs")):
             self._remote = self._make_remote()
-        self._promote_pack: Optional[PackWriter] = None
-        self._promote_seq = 0
-        self._promote_futures: List[Future] = []
-        self.promoted_bytes = 0
-        self.promoted_chunks = 0
-        self.demoted_bytes = 0
-        self.prefetched_bytes = 0
-        self.prefetch_fetch_s = 0.0
-        self.prefetch_skipped_chunks = 0
+        self._promote_pack: Optional[PackWriter] = None   # guarded-by: _lock
+        self._promote_seq = 0                             # guarded-by: _lock
+        self._promote_futures: List[Future] = []          # guarded-by: _lock
+        # telemetry counters: plain += is a read-modify-write, so racing
+        # readers lose increments; a dedicated leaf lock (never held while
+        # calling into any tier) keeps the health numbers exact
+        self._stats_lock = threading.Lock()
+        self.promoted_bytes = 0                 # guarded-by: _stats_lock
+        self.promoted_chunks = 0                # guarded-by: _stats_lock
+        self.demoted_bytes = 0                  # guarded-by: _stats_lock
+        self.prefetched_bytes = 0               # guarded-by: _stats_lock
+        self.prefetch_fetch_s = 0.0             # guarded-by: _stats_lock
+        self.prefetch_skipped_chunks = 0        # guarded-by: _stats_lock
         # recovery accounting (surfaced via tier_stats()["health"])
-        self.verified_chunks = 0
-        self.verify_failures = 0
-        self.repaired_chunks = 0
-        self.repaired_bytes = 0
-        self.read_retries = 0
-        self.fail_fast_reads = 0
-        self.hedged_fetches = 0
-        self.hedge_wins = 0
-        self.quarantined: set = set()           # (digest, tier) pairs
-        self._fallback_sources: List = []       # ref -> Optional[bytes]
+        self.verified_chunks = 0                # guarded-by: _stats_lock
+        self.verify_failures = 0                # guarded-by: _stats_lock
+        self.repaired_chunks = 0                # guarded-by: _stats_lock
+        self.repaired_bytes = 0                 # guarded-by: _stats_lock
+        self.read_retries = 0                   # guarded-by: _stats_lock
+        self.fail_fast_reads = 0                # guarded-by: _stats_lock
+        self.hedged_fetches = 0                 # guarded-by: _stats_lock
+        self.hedge_wins = 0                     # guarded-by: _stats_lock
+        self.quarantined: set = set()   # (digest, tier)  # guarded-by: _stats_lock
+        self._fallback_sources: List = []       # guarded-by: _lock
 
     # ------------------------------------------------------------ tier admin
 
@@ -527,7 +531,8 @@ class TieredChunkStore:
         self.local.save_index()
         self.ram.discard([r.digest for r in move])
         moved = sum(len(p) for p in payloads)
-        self.demoted_bytes += moved
+        with self._stats_lock:
+            self.demoted_bytes += moved
         self._bump_epoch()
         return moved
 
@@ -563,6 +568,7 @@ class TieredChunkStore:
                 ]
                 self._promote_pack.flush()
                 self.local.register_chunks(entries)
+            with self._stats_lock:
                 self.promoted_chunks += len(fresh)
                 self.promoted_bytes += sum(len(p) for _, p in fresh)
             self._bump_epoch()
@@ -633,7 +639,8 @@ class TieredChunkStore:
                 # prefetch is best-effort warming: a dead or raced remote
                 # tier must not fail registration — skip the remote set and
                 # let the cold start demand-fault whatever it truly needs
-                self.prefetch_skipped_chunks += len(fetch)
+                with self._stats_lock:
+                    self.prefetch_skipped_chunks += len(fetch)
                 fetch = []
             if fetch:
                 stats.remote_fetch_s = time.perf_counter() - t0
@@ -646,7 +653,8 @@ class TieredChunkStore:
                     bad = sum(1 for (r, _), d in zip(remote_items, digests)
                               if d != r.digest)
                     if bad:
-                        self.verify_failures += bad
+                        with self._stats_lock:
+                            self.verify_failures += bad
                         remote_items = [
                             (r, p) for (r, p), d in zip(remote_items, digests)
                             if d == r.digest
@@ -657,8 +665,9 @@ class TieredChunkStore:
                 stats.prefetched_chunks += len(remote_items)
         if stats.prefetched_chunks:
             self._bump_epoch()
-        self.prefetched_bytes += stats.prefetched_bytes
-        self.prefetch_fetch_s += stats.remote_fetch_s
+        with self._stats_lock:
+            self.prefetched_bytes += stats.prefetched_bytes
+            self.prefetch_fetch_s += stats.remote_fetch_s
         return stats
 
     # -------------------------------------------------- refcounted GC (CAS)
@@ -772,7 +781,8 @@ class TieredChunkStore:
                 breaker.record_failure()
                 if attempt + 1 >= policy.max_attempts:
                     break
-                self.read_retries += 1
+                with self._stats_lock:
+                    self.read_retries += 1
                 if stats is not None:
                     stats.retries += 1
                 delay = self._backoff(attempt)
@@ -810,7 +820,8 @@ class TieredChunkStore:
                 breaker.record_failure()
                 if attempt + 1 >= policy.max_attempts:
                     break
-                self.read_retries += 1
+                with self._stats_lock:
+                    self.read_retries += 1
                 delay = self._backoff(attempt)
                 if time.monotonic() + delay >= deadline:
                     raise DeadlineExceededError([ref.digest], "local", exc)
@@ -833,7 +844,8 @@ class TieredChunkStore:
         policy = self.retry
         digests = [r.digest for r, _ in items]
         if not breaker.allow():
-            self.fail_fast_reads += len(items)
+            with self._stats_lock:
+                self.fail_fast_reads += len(items)
             raise TierUnavailableError(
                 digests, "remote", "circuit breaker open")
         deadline = time.monotonic() + policy.deadline_s
@@ -851,7 +863,8 @@ class TieredChunkStore:
                 breaker.record_failure()
                 if attempt + 1 >= policy.max_attempts or breaker.is_open:
                     break
-                self.read_retries += 1
+                with self._stats_lock:
+                    self.read_retries += 1
                 if stats is not None:
                     stats.retries += 1
                 delay = self._backoff(attempt)
@@ -879,7 +892,8 @@ class TieredChunkStore:
             pass
         # primary is dragging its tail: race a duplicate fetch against it,
         # first success wins (the loser writes into buffers nobody reads)
-        self.hedged_fetches += 1
+        with self._stats_lock:
+            self.hedged_fetches += 1
         shadow = [(r, memoryview(bytearray(r.size))) for r, _ in scratch]
         second = pool.submit(remote.read_into, shadow)
         pending = {first, second}
@@ -888,7 +902,8 @@ class TieredChunkStore:
             for fut in done:
                 if fut.exception() is None:
                     if fut is second:
-                        self.hedge_wins += 1
+                        with self._stats_lock:
+                            self.hedge_wins += 1
                         for (_, sv), (_, dv) in zip(shadow, scratch):
                             dv[:] = sv
                     return fut.result()
@@ -907,10 +922,12 @@ class TieredChunkStore:
         if not checks:
             return
         digests = digest_many([v for _, v, _ in checks])
-        self.verified_chunks += len(checks)
+        with self._stats_lock:
+            self.verified_chunks += len(checks)
         for (ref, view, tier), got in zip(checks, digests):
             if got != ref.digest:
-                self.verify_failures += 1
+                with self._stats_lock:
+                    self.verify_failures += 1
                 if stats is not None:
                     stats.verify_failures += 1
                 self._recover_chunk(ref, view, tier,
@@ -951,7 +968,8 @@ class TieredChunkStore:
     def _quarantine(self, ref: ChunkRef, tier: str) -> None:
         """Make a corrupt stored copy unreachable (it can never be served;
         a later repair re-registers a verified payload in its place)."""
-        self.quarantined.add((ref.digest, tier))
+        with self._stats_lock:
+            self.quarantined.add((ref.digest, tier))
         if tier == "ram":
             self.ram.discard([ref.digest])
         elif tier == "local":
@@ -993,8 +1011,9 @@ class TieredChunkStore:
             tried.append(src)
             if len(payload) == ref.size and chunk_digest(payload) == ref.digest:
                 view[:] = payload
-                self.repaired_chunks += 1
-                self.repaired_bytes += ref.size
+                with self._stats_lock:
+                    self.repaired_chunks += 1
+                    self.repaired_bytes += ref.size
                 if stats is not None:
                     stats.repaired_chunks += 1
                     stats.repaired_bytes += ref.size
@@ -1070,7 +1089,8 @@ class TieredChunkStore:
                 continue    # movement race: re-classify once more
             payload, tier = got
             if self.spec.verify_reads and chunk_digest(payload) != ref.digest:
-                self.verify_failures += 1
+                with self._stats_lock:
+                    self.verify_failures += 1
                 buf = bytearray(payload)
                 self._recover_chunk(ref, memoryview(buf), tier, corrupt=True)
                 payload = bytes(buf)
@@ -1084,7 +1104,9 @@ class TieredChunkStore:
                     self._promote_payloads, [(ref, payload)]
                 ))
             return payload
-        raise KeyError(ref.digest)
+        # digest absent from every tier means it was genuinely reclaimed;
+        # tier faults raise TierReadError above
+        raise KeyError(ref.digest)  # keyerror-ok: documented reclaim contract
 
     def _read_one(self, ref: ChunkRef) -> Optional[Tuple[bytes, str]]:
         """One classification pass of the demand-fault path: ``(payload,
@@ -1145,7 +1167,8 @@ class TieredChunkStore:
                     digests = digest_many([fetched[k] for k in keys])
                     for key, got in zip(keys, digests):
                         if got != key:
-                            self.verify_failures += 1
+                            with self._stats_lock:
+                                self.verify_failures += 1
                             ref = by_digest[key]
                             buf = bytearray(ref.size)
                             self._recover_chunk(ref, memoryview(buf),
@@ -1209,7 +1232,7 @@ class TieredChunkStore:
             elif self._remote is not None and self._remote.has(ref.digest):
                 remote_items.append((ref, view))
             else:
-                raise KeyError(ref.digest)
+                raise KeyError(ref.digest)  # keyerror-ok: absent from every tier = reclaimed, same contract as get_chunk
 
         total = 0
         remote_future: Optional[Future] = None
@@ -1376,13 +1399,14 @@ class TieredChunkStore:
                 "chunks": self.local.num_chunks,
                 "stored_bytes": self.local.stored_bytes(),
             },
-            "promoted_bytes": self.promoted_bytes,
-            "promoted_chunks": self.promoted_chunks,
-            "demoted_bytes": self.demoted_bytes,
-            "prefetched_bytes": self.prefetched_bytes,
-            "prefetch_fetch_s": round(self.prefetch_fetch_s, 6),
-            "residency_epoch": self.residency_epoch,
-            "health": {
+        }
+        with self._stats_lock:
+            out["promoted_bytes"] = self.promoted_bytes
+            out["promoted_chunks"] = self.promoted_chunks
+            out["demoted_bytes"] = self.demoted_bytes
+            out["prefetched_bytes"] = self.prefetched_bytes
+            out["prefetch_fetch_s"] = round(self.prefetch_fetch_s, 6)
+            out["health"] = {
                 "breakers": {t: b.stats() for t, b in self.breakers.items()},
                 "verified_chunks": self.verified_chunks,
                 "verify_failures": self.verify_failures,
@@ -1394,8 +1418,9 @@ class TieredChunkStore:
                 "hedged_fetches": self.hedged_fetches,
                 "hedge_wins": self.hedge_wins,
                 "prefetch_skipped_chunks": self.prefetch_skipped_chunks,
-            },
-        }
+            }
+        # epoch reads are advertised lock-free everywhere else too
+        out["residency_epoch"] = self.residency_epoch
         if self._remote is not None:
             out["remote"] = self._remote.stats()
         if self.faults is not None:

@@ -32,7 +32,12 @@ ChunkKey = Tuple[Path, int]
 def _atomic_json_dump(path: str, obj: object) -> None:
     """Write ``obj`` as JSON with the same crash-safe discipline as the
     chunk-store index: write a sibling tmp file, flush + fsync, then
-    atomically rename over the destination."""
+    atomically rename over the destination.
+
+    Registered as an approved atomic helper with the ``atomicio``
+    analyzer pass (``repro.analysis``): persistent-state writes under
+    ``core/`` must route through a helper like this one, and the A3 rule
+    audits the helper body itself for the fsync + replace pair."""
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(obj, f)

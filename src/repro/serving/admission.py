@@ -133,23 +133,27 @@ class _Lane:
     def __init__(self, worker_id: int, cfg: AdmissionConfig):
         self.worker_id = worker_id
         self.cfg = cfg
-        self.queue: Deque[_Pending] = deque()
-        self.open = True          # closed lanes stop admitting and draining
-        self.running = 0
-        self.submitted = 0
-        self.completed = 0        # resolved (successfully or with an error)
-        self.failed = 0           # subset of completed that raised
-        self.shed = 0
-        self.steals = 0           # requests this lane pulled from others
-        self.stolen = 0           # requests other lanes pulled from this one
-        self.max_waiting = 0
-        self.max_running = 0
+        self.queue: Deque[_Pending] = deque()   # guarded-by: _mu
+        # closed lanes stop admitting and draining
+        self.open = True          # guarded-by: _mu
+        self.running = 0          # guarded-by: _mu
+        self.submitted = 0        # guarded-by: _mu
+        # resolved (successfully or with an error)
+        self.completed = 0        # guarded-by: _mu
+        self.failed = 0           # subset of completed that raised  # guarded-by: _mu
+        self.shed = 0             # guarded-by: _mu
+        self.steals = 0           # pulled from others  # guarded-by: _mu
+        self.stolen = 0           # pulled from this lane  # guarded-by: _mu
+        self.max_waiting = 0      # guarded-by: _mu
+        self.max_running = 0      # guarded-by: _mu
 
     @property
     def occupancy(self) -> int:
+        # holds-lock: _mu
         return len(self.queue) + self.running
 
     def note_depth(self) -> None:
+        # holds-lock: _mu
         # queue depth = backlog beyond the execution slots (requests a
         # free thread could not immediately absorb)
         self.max_waiting = max(
@@ -158,6 +162,7 @@ class _Lane:
         )
 
     def stats(self) -> Dict[str, int]:
+        # holds-lock: _mu
         return {
             "worker_id": self.worker_id,
             "open": self.open,
@@ -194,13 +199,14 @@ class AdmissionController:
         self.config = config or AdmissionConfig()
         self._mu = threading.Lock()
         self._cv = threading.Condition(self._mu)
-        self._closing = False
-        self._threads: List[threading.Thread] = []
+        self._closing = False     # guarded-by: _mu
+        # guarded-by: _mu [writes] — shutdown joins outside the lock
+        self._threads: List[threading.Thread] = []  # guarded-by: _mu [writes]
         self._steal_cfg: "Optional[StealConfig]" = getattr(cluster, "steal", None)
         workers = getattr(cluster, "active_workers", None)
         workers = workers() if callable(workers) else cluster.workers
-        self._lanes: List[_Lane] = []
-        self._by_wid: Dict[int, _Lane] = {}
+        self._lanes: List[_Lane] = []       # guarded-by: _mu
+        self._by_wid: Dict[int, _Lane] = {}  # guarded-by: _mu
         self._clock = cluster._clock
         with self._mu:
             for w in workers:
@@ -211,6 +217,7 @@ class AdmissionController:
     # -- lane lifecycle (callers: __init__, Autoscaler) -----------------------
 
     def _new_lane(self, worker_id: int) -> _Lane:
+        # holds-lock: _mu
         """Create (or reopen) a lane and its drain threads.  _mu held."""
         lane = self._by_wid.get(worker_id)
         if lane is None:
@@ -265,6 +272,7 @@ class AdmissionController:
     # -- submission -----------------------------------------------------------
 
     def _open_lane_for(self, function: str) -> _Lane:
+        # holds-lock: _mu
         """The home worker's lane, or — when that lane is closed/missing
         (autoscale retired the home between placement and submit) — the
         shallowest open lane.  _mu held."""
@@ -330,11 +338,13 @@ class AdmissionController:
             self._dispatch(lane, pending)
 
     def _next(self, lane: _Lane) -> Optional[_Pending]:
+        # holds-lock: _mu
         if lane.queue:
             return lane.queue.popleft()
         return self._try_steal(lane)
 
     def _try_steal(self, thief: _Lane) -> Optional[_Pending]:
+        # holds-lock: _mu
         """Pull the oldest stealable request from the deepest foreign lane.
         The cluster's ``steal_ok`` gate enforces the warm-or-cheap rule and
         skips functions whose single-flight lock is busy.  _mu held (the
@@ -377,7 +387,7 @@ class AdmissionController:
                     else:
                         result = self.cluster._run(p.request, p.submitted_t)
                     p.future.set_result(result)
-                except BaseException as exc:
+                except BaseException as exc:  # broad-ok: routed to the caller via future.set_exception
                     with self._mu:
                         lane.failed += 1
                     p.future.set_exception(exc)
@@ -411,7 +421,9 @@ class AdmissionController:
         controller's mutex — taking ``_mu`` here would self-deadlock.  The
         reads are GIL-atomic ints; placement only needs an advisory
         snapshot, not a consistent one."""
-        return {l.worker_id: l.occupancy for l in list(self._lanes) if l.open}
+        return {l.worker_id: l.occupancy
+                for l in list(self._lanes)  # unguarded-ok: advisory snapshot; _mu here would self-deadlock
+                if l.open}  # unguarded-ok: see above
 
     def queue_depth_peaks(self) -> Dict[str, int]:
         """Per-worker peak queue depth over the controller's lifetime

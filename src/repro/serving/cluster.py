@@ -174,19 +174,20 @@ class Cluster:
             max_workers=max_concurrency or self._executor_target(n_workers),
             thread_name_prefix="cluster",
         )
-        self._flight: Dict[str, threading.Lock] = {}
+        self._flight: Dict[str, threading.Lock] = {}   # guarded-by: _flight_guard
         self._flight_guard = threading.Lock()
         self._results_lock = threading.Lock()
         self._clock = time.perf_counter
-        self.n_requests = 0
-        self.n_cold = 0
-        self.n_shed = 0
+        self.n_requests = 0                 # guarded-by: _results_lock
+        self.n_cold = 0                     # guarded-by: _results_lock
+        self.n_shed = 0                     # guarded-by: _results_lock
         # typed failure taxonomy (FailureKind buckets) + worker health
-        self.n_timeout = 0
-        self.n_fault_fatal = 0
-        self.n_fault_recovered = 0
-        self.n_worker_crashes = 0
-        self._dead: set = set()             # worker_ids detected crashed
+        self.n_timeout = 0                  # guarded-by: _results_lock
+        self.n_fault_fatal = 0              # guarded-by: _results_lock
+        self.n_fault_recovered = 0          # guarded-by: _results_lock
+        self.n_worker_crashes = 0           # guarded-by: _results_lock
+        # worker_ids detected crashed
+        self._dead: set = set()             # guarded-by: _results_lock
         # failover state: re-registration material for surviving workers
         self._specs: Dict[str, FunctionSpec] = {}
         # family → (model, base_params, shared jitted fwd)
@@ -194,18 +195,20 @@ class Cluster:
         # scheduling state: sticky home per function + the placement
         # signals (affinity key, Eq. 1 cost), guarded by the topology lock
         self._topology = threading.Lock()
-        self._home: Dict[str, int] = {}
-        self._affinity: Dict[str, Optional[str]] = {}
-        self._fn_cost: Dict[str, float] = {}
-        self._retired: set = set()          # worker_ids scaled down (standby)
-        self._next_worker_idx = n_workers
-        self.scale_events: List[Dict] = []
-        self.n_steals = 0
-        self._service_ema: Optional[float] = None   # mean boot+exec (steal gate)
-        self.queue_s_total = 0.0
+        self._home: Dict[str, int] = {}     # guarded-by: _topology
+        self._affinity: Dict[str, Optional[str]] = {}  # guarded-by: _topology
+        self._fn_cost: Dict[str, float] = {}           # guarded-by: _topology
+        # worker_ids scaled down (standby)
+        self._retired: set = set()          # guarded-by: _topology
+        self._next_worker_idx = n_workers   # guarded-by: _topology
+        self.scale_events: List[Dict] = []  # guarded-by: _topology
+        self.n_steals = 0                   # guarded-by: _results_lock
+        # mean boot+exec (steal gate)
+        self._service_ema: Optional[float] = None   # guarded-by: _results_lock
+        self.queue_s_total = 0.0            # guarded-by: _results_lock
         # (queue_s, boot_s, exec_s, e2e_s, cold) per completed request —
         # a uniform reservoir over the run (see _Reservoir)
-        self._samples = _Reservoir(_SERVING_SAMPLE_CAP)
+        self._samples = _Reservoir(_SERVING_SAMPLE_CAP)  # guarded-by: _results_lock
         self._admission: Optional[AdmissionController] = None
 
     def _executor_target(self, n_active: int) -> int:
@@ -216,8 +219,10 @@ class Cluster:
         return max(8, min(128, n_active * (self._admission_cfg.worker_concurrency + 2)))
 
     def _resize_executor(self) -> None:
-        """Re-derive the executor width after a scale event.  An explicit
-        ``max_concurrency`` is a user cap and is never overridden."""
+        # holds-lock: _topology
+        """Re-derive the executor width after a scale event (callers hold
+        the topology lock).  An explicit ``max_concurrency`` is a user cap
+        and is never overridden."""
         if self._max_concurrency is not None:
             return
         target = self._executor_target(len(self.workers) - len(self._retired))
@@ -430,7 +435,8 @@ class Cluster:
         scale-up pays to run ``fn`` on a fresh worker."""
         try:
             return float(worker.predicted_cost(fn, Strategy.AUTO))
-        except Exception:
+        except (KeyError, ValueError, AttributeError):
+            # unregistered fn / no AUTO prediction recorded: no estimate
             return None
 
     def predicted_cold_cost(self, fn: str) -> Optional[float]:
@@ -495,7 +501,7 @@ class Cluster:
 
     def _note_scale(self, action: str, worker_id: int, t_s: float,
                     lane_depth: int) -> None:
-        # topology lock held by callers
+        # holds-lock: _topology
         self.scale_events.append({
             "t_s": round(t_s, 4),
             "action": action,
@@ -706,7 +712,7 @@ class Cluster:
                     request, first=worker)
         except ShedError:
             raise
-        except BaseException as exc:
+        except BaseException as exc:  # broad-ok: classified via FailureKind, recorded, re-raised
             kind = FailureKind.classify(exc)
             with self._results_lock:
                 if kind is FailureKind.TIMEOUT:
@@ -832,7 +838,7 @@ class Cluster:
                     results[i] = fut.result()
                 except ShedError:
                     shed[i] = True
-                except Exception as e:  # noqa: BLE001 - reported, not swallowed
+                except Exception as e:  # broad-ok: collected into the errors list and reported
                     errors.append((i, e))
             wall_s = self._clock() - t_start
         finally:

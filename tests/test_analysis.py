@@ -1,0 +1,615 @@
+"""Tests for ``repro.analysis`` — the AST invariant analyzer.
+
+Each pass gets a *seeded violation* fixture (a minimal module that must
+produce exactly the expected finding) and a *clean twin* (the same shape
+with the discipline followed, which must produce nothing).  On top of
+the per-pass fixtures: a lock-graph unit test for cycle detection, the
+baseline fingerprint/split workflow, and a self-run asserting the repo
+itself stays finding-free modulo the committed baseline.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import AnalysisConfig, analyze, default_root, run_passes
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.model import Baseline, Finding
+from repro.analysis.passes.lockorder import build_lock_graph
+from repro.analysis.scan import find_lock_decls, load_module
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO_ROOT, "analysis-baseline.json")
+
+
+def _module(tmp_path, source, rel="core/mod.py"):
+    p = tmp_path / rel.replace("/", "_")
+    p.write_text(textwrap.dedent(source))
+    return load_module(str(p), rel)
+
+
+def _run(tmp_path, source, passes, rel="core/mod.py", config=None):
+    mod = _module(tmp_path, source, rel=rel)
+    return run_passes([mod], config or AnalysisConfig(), names=passes)
+
+
+# ---------------------------------------------------------------- guards
+
+GUARDS_VIOLATION = """
+    import threading
+
+    class Store:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0   # guarded-by: _lock
+
+        def bump(self):
+            self.count += 1
+
+        def peek(self):
+            return self.count
+"""
+
+GUARDS_CLEAN = """
+    import threading
+
+    class Store:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0   # guarded-by: _lock
+
+        def bump(self):
+            with self._lock:
+                self.count += 1
+
+        def peek(self):
+            with self._lock:
+                return self.count
+"""
+
+
+class TestGuards:
+    def test_detects_unlocked_write_and_read(self, tmp_path):
+        got = _run(tmp_path, GUARDS_VIOLATION, ["guards"])
+        rules = [(f.rule, f.scope) for f in got]
+        assert ("G001", "Store.bump") in rules
+        assert ("G002", "Store.peek") in rules
+
+    def test_clean_twin(self, tmp_path):
+        assert _run(tmp_path, GUARDS_CLEAN, ["guards"]) == []
+
+    def test_holds_lock_marker_suppresses(self, tmp_path):
+        src = GUARDS_VIOLATION.replace(
+            "def bump(self):",
+            "def bump(self):  # holds-lock: _lock",
+        ).replace(
+            "def peek(self):",
+            "def peek(self):  # holds-lock: _lock",
+        )
+        assert _run(tmp_path, src, ["guards"]) == []
+
+    def test_unguarded_ok_marker_suppresses(self, tmp_path):
+        src = GUARDS_VIOLATION.replace(
+            "return self.count",
+            "return self.count  # unguarded-ok: advisory snapshot",
+        )
+        got = _run(tmp_path, src, ["guards"])
+        assert [f.rule for f in got] == ["G001"]  # the write still fires
+
+    def test_writes_only_relaxes_reads(self, tmp_path):
+        src = GUARDS_VIOLATION.replace(
+            "# guarded-by: _lock", "# guarded-by: _lock [writes]"
+        )
+        got = _run(tmp_path, src, ["guards"])
+        assert [f.rule for f in got] == ["G001"]
+
+    def test_wrong_lock_still_flagged(self, tmp_path):
+        src = """
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._other = threading.Lock()
+                    self.count = 0   # guarded-by: _lock
+
+                def bump(self):
+                    with self._other:
+                        self.count += 1
+        """
+        got = _run(tmp_path, src, ["guards"])
+        assert [f.rule for f in got] == ["G001"]
+
+    def test_nested_def_does_not_inherit_with(self, tmp_path):
+        src = """
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0   # guarded-by: _lock
+
+                def bump(self):
+                    with self._lock:
+                        def inner():
+                            self.count += 1
+                        return inner
+        """
+        got = _run(tmp_path, src, ["guards"])
+        assert [f.rule for f in got] == ["G001"]
+
+    def test_condition_alias_counts_as_lock(self, tmp_path):
+        src = """
+            import threading
+
+            class Q:
+                def __init__(self):
+                    self._mu = threading.Lock()
+                    self._cv = threading.Condition(self._mu)
+                    self.depth = 0   # guarded-by: _mu
+
+                def push(self):
+                    with self._cv:
+                        self.depth += 1
+        """
+        assert _run(tmp_path, src, ["guards"]) == []
+
+    def test_other_typed_receiver_not_confused(self, tmp_path):
+        # a local object of a *different* class sharing the field name
+        # must not be matched against the guarded declaration
+        src = """
+            import threading
+
+            class Stats:
+                def __init__(self):
+                    self.count = 0
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0   # guarded-by: _lock
+
+                def snapshot(self):
+                    stats = Stats()
+                    stats.count += 1
+                    return stats
+        """
+        assert _run(tmp_path, src, ["guards"]) == []
+
+    def test_bad_annotation_reports_g003(self, tmp_path):
+        src = """
+            class Store:
+                def __init__(self):
+                    self.count = 0   # guarded-by:
+        """
+        got = _run(tmp_path, src, ["guards"])
+        assert [f.rule for f in got] == ["G003"]
+
+
+# -------------------------------------------------------------- lockorder
+
+LOCKORDER_CYCLE = """
+    import threading
+
+    class A:
+        def __init__(self):
+            self.l1 = threading.Lock()
+            self.l2 = threading.Lock()
+
+        def fwd(self):
+            with self.l1:
+                with self.l2:
+                    pass
+
+        def rev(self):
+            with self.l2:
+                with self.l1:
+                    pass
+"""
+
+LOCKORDER_CLEAN = """
+    import threading
+
+    class A:
+        def __init__(self):
+            self.l1 = threading.Lock()
+            self.l2 = threading.Lock()
+
+        def fwd(self):
+            with self.l1:
+                with self.l2:
+                    pass
+
+        def also_fwd(self):
+            with self.l1:
+                with self.l2:
+                    pass
+"""
+
+
+class TestLockOrder:
+    def test_detects_cycle(self, tmp_path):
+        got = _run(tmp_path, LOCKORDER_CYCLE, ["lockorder"])
+        assert [f.rule for f in got] == ["L001"]
+        assert "A.l1" in got[0].detail and "A.l2" in got[0].detail
+
+    def test_clean_twin(self, tmp_path):
+        assert _run(tmp_path, LOCKORDER_CLEAN, ["lockorder"]) == []
+
+    def test_cycle_through_call_graph(self, tmp_path):
+        src = """
+            import threading
+
+            class A:
+                def __init__(self):
+                    self.l1 = threading.Lock()
+                    self.l2 = threading.Lock()
+
+                def fwd(self):
+                    with self.l1:
+                        self.grab_two()
+
+                def grab_two(self):
+                    with self.l2:
+                        pass
+
+                def rev(self):
+                    with self.l2:
+                        self.grab_one()
+
+                def grab_one(self):
+                    with self.l1:
+                        pass
+        """
+        got = _run(tmp_path, src, ["lockorder"])
+        assert [f.rule for f in got] == ["L001"]
+
+    def test_self_acquire_nonreentrant(self, tmp_path):
+        src = """
+            import threading
+
+            class A:
+                def __init__(self):
+                    self.mu = threading.Lock()
+
+                def outer(self):
+                    with self.mu:
+                        self.inner()
+
+                def inner(self):
+                    with self.mu:
+                        pass
+        """
+        got = _run(tmp_path, src, ["lockorder"])
+        assert [f.rule for f in got] == ["L002"]
+
+    def test_rlock_self_acquire_ok(self, tmp_path):
+        src = """
+            import threading
+
+            class A:
+                def __init__(self):
+                    self.mu = threading.RLock()
+
+                def outer(self):
+                    with self.mu:
+                        self.inner()
+
+                def inner(self):
+                    with self.mu:
+                        pass
+        """
+        assert _run(tmp_path, src, ["lockorder"]) == []
+
+    def test_graph_edges_and_cycles_unit(self, tmp_path):
+        mod = _module(tmp_path, LOCKORDER_CYCLE)
+        graph = build_lock_graph([mod], AnalysisConfig())
+        assert ("A.l1", "A.l2") in graph.edges
+        assert ("A.l2", "A.l1") in graph.edges
+        assert graph.cycles() == [["A.l1", "A.l2"]]
+        assert graph.successors("A.l1") == ["A.l2"]
+
+    def test_holds_lock_marker_creates_edge(self, tmp_path):
+        src = """
+            import threading
+
+            class A:
+                def __init__(self):
+                    self.l1 = threading.Lock()
+                    self.l2 = threading.Lock()
+
+                def locked_helper(self):  # holds-lock: l1
+                    with self.l2:
+                        pass
+        """
+        mod = _module(tmp_path, src)
+        graph = build_lock_graph([mod], AnalysisConfig())
+        assert ("A.l1", "A.l2") in graph.edges
+
+    def test_lock_discovery_kinds(self, tmp_path):
+        src = """
+            import threading
+            from dataclasses import dataclass, field
+
+            _pool_lock = threading.Lock()
+
+            @dataclass
+            class Rec:
+                plan_lock: threading.Lock = field(
+                    default_factory=threading.Lock)
+
+            class C:
+                def __init__(self):
+                    self._mu = threading.RLock()
+                    self._cv = threading.Condition(self._mu)
+        """
+        mod = _module(tmp_path, src)
+        decls = {(d.owner, d.attr): d for d in find_lock_decls(mod)}
+        assert decls[("", "_pool_lock")].kind == "Lock"
+        assert decls[("Rec", "plan_lock")].kind == "Lock"
+        assert decls[("C", "_mu")].kind == "RLock"
+        assert decls[("C", "_cv")].alias == "_mu"
+
+
+# --------------------------------------------------------------- atomicio
+
+ATOMIC_VIOLATION = """
+    import json
+
+    def save_index(path, obj):
+        with open(path, "w") as f:
+            json.dump(obj, f)
+"""
+
+ATOMIC_CLEAN = """
+    import json
+    import os
+
+    def save_index(path, obj):
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(obj, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+"""
+
+
+class TestAtomicIO:
+    CFG = AnalysisConfig(
+        persistence_prefixes=("core/",),
+        atomic_helpers=frozenset({("core/mod.py", "save_index")}),
+    )
+
+    def test_detects_raw_write(self, tmp_path):
+        got = _run(tmp_path, ATOMIC_VIOLATION, ["atomicio"])
+        assert sorted(f.rule for f in got) == ["A1", "A2"]
+
+    def test_clean_when_blessed_helper(self, tmp_path):
+        # the same raw calls inside a registered helper are the
+        # *implementation* of the rule, and the helper passes the audit
+        assert _run(tmp_path, ATOMIC_CLEAN, ["atomicio"],
+                    config=self.CFG) == []
+
+    def test_helper_missing_fsync_is_a3(self, tmp_path):
+        src = ATOMIC_CLEAN.replace("            os.fsync(f.fileno())\n", "")
+        got = _run(tmp_path, src, ["atomicio"], config=self.CFG)
+        assert [f.rule for f in got] == ["A3"]
+        assert "fsync" in got[0].message
+
+    def test_atomic_ok_marker_suppresses(self, tmp_path):
+        src = ATOMIC_VIOLATION.replace(
+            'with open(path, "w") as f:',
+            'with open(path, "w") as f:  # atomic-ok: scratch file',
+        ).replace(
+            "json.dump(obj, f)",
+            "json.dump(obj, f)  # atomic-ok: scratch file",
+        )
+        assert _run(tmp_path, src, ["atomicio"]) == []
+
+    def test_out_of_scope_module_ignored(self, tmp_path):
+        assert _run(tmp_path, ATOMIC_VIOLATION, ["atomicio"],
+                    rel="viz/mod.py") == []
+
+
+# ----------------------------------------------------------------- errors
+
+class TestErrors:
+    def test_bare_except_is_e1(self, tmp_path):
+        src = """
+            def f():
+                try:
+                    pass
+                except:
+                    pass
+        """
+        got = _run(tmp_path, src, ["errors"], rel="viz/mod.py")
+        assert [f.rule for f in got] == ["E1"]
+
+    def test_broad_except_on_typed_path_is_e2_error(self, tmp_path):
+        src = """
+            def f():
+                try:
+                    pass
+                except Exception:
+                    pass
+        """
+        got = _run(tmp_path, src, ["errors"])
+        assert [(f.rule, f.severity) for f in got] == [("E2", "error")]
+
+    def test_broad_except_off_path_is_warning(self, tmp_path):
+        src = """
+            def f():
+                try:
+                    pass
+                except Exception:
+                    pass
+        """
+        got = _run(tmp_path, src, ["errors"], rel="viz/mod.py")
+        assert [(f.rule, f.severity) for f in got] == [("E2", "warning")]
+
+    def test_broad_ok_marker_suppresses(self, tmp_path):
+        src = """
+            def f():
+                try:
+                    pass
+                except Exception:  # broad-ok: background thread
+                    pass
+        """
+        assert _run(tmp_path, src, ["errors"]) == []
+
+    def test_typed_except_clean(self, tmp_path):
+        src = """
+            def f():
+                try:
+                    pass
+                except (KeyError, ValueError):
+                    pass
+        """
+        assert _run(tmp_path, src, ["errors"]) == []
+
+    def test_keyerror_at_tier_boundary_is_e3(self, tmp_path):
+        src = """
+            def get_chunk(digest):
+                raise KeyError(digest)
+        """
+        cfg = AnalysisConfig(tier_boundary_modules=("core/mod.py",))
+        got = _run(tmp_path, src, ["errors"], config=cfg)
+        assert [f.rule for f in got] == ["E3"]
+        ok = src.replace("raise KeyError(digest)",
+                         "raise KeyError(digest)  # keyerror-ok: contract")
+        assert _run(tmp_path, ok, ["errors"], config=cfg) == []
+
+    def test_wall_clock_in_deterministic_module_is_d1(self, tmp_path):
+        src = """
+            import time
+
+            def arrivals():
+                return time.time()
+        """
+        cfg = AnalysisConfig(deterministic_modules=("core/mod.py",))
+        got = _run(tmp_path, src, ["errors"], config=cfg)
+        assert [f.rule for f in got] == ["D1"]
+        ok = src.replace("return time.time()",
+                         "return time.time()  # wallclock-ok: metrics only")
+        assert _run(tmp_path, ok, ["errors"], config=cfg) == []
+
+    def test_unseeded_rng_is_d2(self, tmp_path):
+        cfg = AnalysisConfig(deterministic_modules=("core/mod.py",))
+        bad = """
+            import numpy as np
+            import random
+
+            def draw():
+                a = np.random.default_rng()
+                b = np.random.uniform()
+                c = random.random()
+                return a, b, c
+        """
+        got = _run(tmp_path, bad, ["errors"], config=cfg)
+        assert [f.rule for f in got] == ["D2", "D2", "D2"]
+        clean = """
+            import numpy as np
+            import random
+
+            def draw(seed):
+                a = np.random.default_rng(seed)
+                c = random.Random(seed).random()
+                return a, c
+        """
+        assert _run(tmp_path, clean, ["errors"], config=cfg) == []
+
+
+# ------------------------------------------------------- baseline workflow
+
+class TestBaseline:
+    def _finding(self, line=10, detail="x"):
+        return Finding(pass_name="guards", rule="G001", severity="error",
+                       file="core/mod.py", line=line, scope="Store.bump",
+                       detail=detail, message="m")
+
+    def test_fingerprint_is_line_independent(self):
+        assert (self._finding(line=10).fingerprint
+                == self._finding(line=99).fingerprint)
+        assert (self._finding(detail="x").fingerprint
+                != self._finding(detail="y").fingerprint)
+
+    def test_split_new_accepted_stale(self, tmp_path):
+        known = self._finding(detail="known")
+        fresh = self._finding(detail="fresh")
+        gone = self._finding(detail="gone")
+        base = Baseline.from_findings([known, gone], reason="seed")
+        path = str(tmp_path / "b.json")
+        base.save(path)
+        loaded = Baseline.load(path)
+        new, accepted, stale = loaded.split([known, fresh])
+        assert [f.detail for f in new] == ["fresh"]
+        assert [f.detail for f in accepted] == ["known"]
+        assert stale == [gone.fingerprint]
+
+    def test_missing_baseline_means_everything_new(self, tmp_path):
+        loaded = Baseline.load(str(tmp_path / "absent.json"))
+        new, accepted, stale = loaded.split([self._finding()])
+        assert len(new) == 1 and not accepted and not stale
+
+
+# ------------------------------------------------------------ repo self-run
+
+class TestSelfRun:
+    def test_repo_is_clean_modulo_baseline(self):
+        findings = analyze()
+        baseline = Baseline.load(BASELINE)
+        new = [f for f in findings if f.fingerprint not in baseline]
+        assert not new, "new analyzer findings:\n" + "\n".join(
+            f.format() for f in new)
+
+    def test_annotations_present_in_core_modules(self):
+        # the conventions this PR introduces must keep existing: at least
+        # one guarded-by declaration in each annotated serving/core module
+        root = default_root()
+        for rel in ("core/tiers.py", "core/registry.py",
+                    "serving/cluster.py", "serving/admission.py"):
+            mod = load_module(os.path.join(root, *rel.split("/")), rel)
+            kinds = {m.kind for ms in mod.markers.values() for m in ms}
+            assert "guarded-by" in kinds, f"{rel} lost its annotations"
+
+    def test_cli_gate_exits_zero(self, capsys):
+        assert cli_main(["--fail-on-new"]) == 0
+        out = capsys.readouterr().out
+        assert "repro-analyze:" in out
+
+    def test_cli_json_format(self, capsys):
+        assert cli_main(["--format", "json"]) == 0
+        doc = json.loads(capsys.readouterr().out)
+        assert doc["summary"]["new"] == 0
+        assert isinstance(doc["findings"], list)
+
+    def test_cli_list_passes(self, capsys):
+        assert cli_main(["--list-passes"]) == 0
+        out = capsys.readouterr().out
+        for name in ("guards", "lockorder", "atomicio", "errors"):
+            assert name in out
+
+    def test_cli_fails_on_new_finding(self, tmp_path, capsys):
+        pkg = tmp_path / "core"
+        pkg.mkdir()
+        (pkg / "mod.py").write_text(textwrap.dedent(GUARDS_VIOLATION))
+        rc = cli_main(["--root", str(tmp_path),
+                       "--baseline", str(tmp_path / "b.json"),
+                       "--fail-on-new"])
+        capsys.readouterr()
+        assert rc == 1
+
+    @pytest.mark.slow
+    def test_module_entrypoint_subprocess(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--fail-on-new"],
+            capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -287,3 +287,125 @@ class TestRamResidencyAdvertised:
         tier.discard(["b"])        # fires
         tier.clear()               # "c" still resident: fires
         assert len(seen) == 3
+
+
+# --------------------------------------------------------------------------
+# regressions for the races the static analyzer (repro.analysis) surfaced
+
+
+class TestCategoryRefsPublishRace:
+    def test_stale_ws_refs_never_republished(self, tmp_path, monkeypatch):
+        """Regression (guards pass, G001 on ``category_refs``): the old
+        ``_category_refs`` computed lock-free and published under no lock,
+        so a compute racing ``generate_working_set``'s swap-and-clear could
+        re-publish refs cut from the dead working set — permanently, since
+        nothing would ever invalidate them again.  Compute and publish now
+        both run under ``plan_lock``; this pins the interleaving with a
+        blocked ``resolve`` and asserts the WS swap (a) waits for the
+        in-flight compute and (b) leaves the cache invalidated, not stale."""
+        from repro.core import registry as registry_mod
+
+        reg, _ = _registry(tmp_path)
+        rec = reg.functions["fn"]
+
+        entered = threading.Event()
+        release = threading.Event()
+        real_resolve = registry_mod.resolve
+        # only the first resolve() after arming blocks — that is the
+        # compute thread's call, because the swapper starts later
+        armed = [True]
+
+        def slow_resolve(*args, **kwargs):
+            if armed and armed.pop():
+                entered.set()
+                assert release.wait(timeout=10)
+            return real_resolve(*args, **kwargs)
+
+        monkeypatch.setattr(registry_mod, "resolve", slow_resolve)
+
+        stale_out = {}
+
+        def compute():
+            stale_out["refs"] = reg._category_refs("fn")
+
+        computer = threading.Thread(target=compute)
+        computer.start()
+        assert entered.wait(timeout=10)
+
+        # swap the working set down to a strict subset while the compute
+        # is parked inside its critical section
+        small_log = AccessLog()
+        small_log.touch("layer0/w")
+        swapper = threading.Thread(
+            target=reg.generate_working_set, args=("fn", small_log)
+        )
+        swapper.start()
+        # the swap's plan_lock section must wait for the in-flight compute
+        swapper.join(timeout=0.4)
+        assert swapper.is_alive(), (
+            "generate_working_set finished while _category_refs was still "
+            "inside its critical section: publish is not serialised"
+        )
+
+        release.set()
+        computer.join(timeout=10)
+        swapper.join(timeout=10)
+        assert not computer.is_alive() and not swapper.is_alive()
+
+        # the swap ran last: the stale publish must be gone
+        with rec.plan_lock:
+            assert rec.category_refs is None, (
+                "stale category_refs survived the working-set swap"
+            )
+        fresh = reg._category_refs("fn")
+        assert len(fresh["ws"]) < len(stale_out["refs"]["ws"]), (
+            "fresh refs should reflect the shrunken working set"
+        )
+
+
+class TestTierCounterExactness:
+    def test_concurrent_prefetch_counts_every_byte(self, tmp_path):
+        """Regression (guards pass, G001 on the telemetry counters): the
+        tier counters were bumped with plain ``+=`` — a racy
+        read-modify-write that loses updates under concurrent prefetches.
+        All counter mutations now take ``_stats_lock``; disjoint parallel
+        prefetches must account for every byte exactly."""
+        rng = np.random.default_rng(7)
+        n_threads, per_thread = 8, 4
+        payloads = _payloads(rng, n_threads * per_thread)
+        store = TieredChunkStore(
+            str(tmp_path / "s"),
+            spec=TierSpec(ram_bytes=64 << 20, **FAST_REMOTE),
+        )
+        refs = _fill(store, payloads)
+        assert store.demote(refs) == sum(len(p) for p in payloads)
+
+        slices = [
+            refs[i * per_thread:(i + 1) * per_thread]
+            for i in range(n_threads)
+        ]
+        barrier = threading.Barrier(n_threads)
+        errors = []
+
+        def prefetcher(chunk_refs):
+            try:
+                barrier.wait(timeout=10)
+                store.prefetch(chunk_refs)
+            except Exception as e:  # pragma: no cover - surfaced below
+                errors.append(e)
+
+        threads = [threading.Thread(target=prefetcher, args=(s,))
+                   for s in slices]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        assert not errors, errors
+        store.join_promotions()
+
+        total = sum(r.size for r in refs)
+        stats = store.tier_stats()
+        assert stats["prefetched_bytes"] == total, (
+            f"lost counter updates: {stats['prefetched_bytes']} != {total}"
+        )
+        assert all(store.tier_of(r.digest) == "ram" for r in refs)
